@@ -1,0 +1,81 @@
+"""Shared benchmark helpers: evaluate one (topology, N, substrate,
+traffic) cell analytically (channel-load bound + zero-load latency) or
+with the cycle-accurate simulator."""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.routing import build_routing
+from repro.core.simulator import SimConfig, saturation_throughput, \
+    zero_load_latency
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# default benchmark sizes (--full sweeps the paper's 16..256 range finer)
+SIZES = [16, 64, 144, 256]
+SIZES_FULL = [16, 36, 64, 100, 144, 196, 256]
+
+
+@functools.lru_cache(maxsize=4096)
+def _routing(name: str, n: int, substrate: str, area: float,
+             roles: str, hex_region: bool = False):
+    topo = T.build(name, n, substrate=substrate, chiplet_area_mm2=area,
+                   roles_scheme=roles, hex_region=hex_region)
+    return topo, build_routing(topo)
+
+
+def evaluate(name: str, n: int, substrate: str = "organic",
+             pattern: str = "uniform", area: float = 74.0,
+             roles: str = "homogeneous", use_sim: bool = False,
+             sim_cfg: SimConfig = SimConfig(cycles=2000, warmup=700)):
+    """Returns a dict with the paper's §V-B metrics for one cell."""
+    if name in T.N_CONSTRAINTS and not T.N_CONSTRAINTS[name](n):
+        return None
+    topo, routing = _routing(name, n, substrate, area, roles)
+    tm = TR.PATTERNS[pattern](topo)
+    t_r = routing.saturation_rate(tm)
+    lat = zero_load_latency(routing, tm)
+    sim_sat = None
+    if use_sim:
+        out = saturation_throughput(routing, tm, sim_cfg, n_rates=6)
+        sim_sat = out["sim_saturation"]
+        lat = out["latency_at_sat"]
+        t_r = sim_sat
+    _, hops, _ = routing.paths_channel_loads(tm)
+    w = tm / max(tm.sum(), 1e-12)
+    avg_hops = float((hops * w).sum())
+    rep = cm.report(topo, t_r, avg_hops, lat)
+    return dict(topology=name, n=n, substrate=substrate, pattern=pattern,
+                area_mm2=area, rel_throughput=rep.rel_throughput,
+                abs_throughput_gbps=rep.abs_throughput_gbps,
+                latency_ns=rep.avg_latency_ns,
+                chiplet_area_mm2=rep.area_mm2,
+                phy_area_frac=rep.phy_area_fraction,
+                power_w=rep.power_w, max_link_mm=rep.max_link_mm,
+                radix=rep.radix, sim=use_sim)
+
+
+def write_csv(path: str, rows: list[dict]):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    rows = [r for r in rows if r]
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    with open(path, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
+    print(f"[bench] wrote {path} ({len(rows)} rows)")
+
+
+def timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, (time.time() - t0) * 1e6

@@ -1,0 +1,218 @@
+"""One benchmark per paper table/figure (see DESIGN.md §7)."""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import linkmodel as lm
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.collectives import build_ici_model
+
+from .common import (RESULTS_DIR, SIZES, SIZES_FULL, evaluate, write_csv)
+
+PRINCIPLED = ["mesh", "folded_torus", "hexamesh", "folded_hexa_torus",
+              "octamesh", "folded_octa_torus"]
+ALL_TOPOLOGIES = list(T.GENERATORS)
+
+
+def fig2_linkmodel(sizes=None):
+    """Fig. 2: data rate vs link length for all substrates."""
+    rows = []
+    for sub in ("organic", "glass", "passive_interposer"):
+        for length in np.linspace(0, 75, 76):
+            rows.append(dict(substrate=sub, length_mm=float(length),
+                             rate_frac=float(lm.rate_fraction(length, sub)),
+                             rate_gbps=float(lm.rate_gbps(length, sub))))
+    write_csv(os.path.join(RESULTS_DIR, "fig2.csv"), rows)
+    return rows[-1]["rate_frac"]
+
+
+def fig4_principles(sizes=None, use_sim=False):
+    """Fig. 4: principled topologies x 3 chiplet sizes, organic."""
+    sizes = sizes or SIZES
+    rows = []
+    for area in (37.0, 74.0, 148.0):
+        for name in PRINCIPLED:
+            for n in sizes:
+                rows.append(evaluate(name, n, "organic", "uniform",
+                                     area=area, use_sim=use_sim))
+    write_csv(os.path.join(RESULTS_DIR, "fig4.csv"), rows)
+    # headline: FHT wins throughput at N=256, 74mm^2
+    sub = [r for r in rows
+           if r and r["n"] == max(sizes) and r["area_mm2"] == 74.0]
+    best = max(sub, key=lambda r: r["abs_throughput_gbps"])
+    return best["topology"]
+
+
+def table1_area(sizes=None):
+    """Table I: chiplet area relative to Mesh."""
+    rows = []
+    for area in (37.0, 74.0, 148.0):
+        base = None
+        for name in PRINCIPLED:
+            r = evaluate(name, 64, "organic", area=area)
+            if name == "mesh":
+                base = r["chiplet_area_mm2"]
+            rows.append(dict(topology=name, area_mm2=area,
+                             chiplet_area_mm2=r["chiplet_area_mm2"],
+                             rel_vs_mesh_pct=100 * (
+                                 r["chiplet_area_mm2"] / base - 1)))
+    write_csv(os.path.join(RESULTS_DIR, "table1.csv"), rows)
+    fht74 = [r for r in rows if r["topology"] == "folded_hexa_torus"
+             and r["area_mm2"] == 74.0][0]
+    return fht74["rel_vs_mesh_pct"]
+
+
+def table2_power(sizes=None):
+    """Table II: power at saturation relative to Mesh (mean over sizes)."""
+    sizes = sizes or SIZES
+    rows = []
+    for area in (37.0, 74.0, 148.0):
+        per_topo = {}
+        for name in PRINCIPLED:
+            rels = []
+            for n in sizes:
+                r = evaluate(name, n, "organic", area=area)
+                base = evaluate("mesh", n, "organic", area=area)
+                rels.append(100 * (r["power_w"] / base["power_w"] - 1))
+            per_topo[name] = (float(np.mean(rels)), float(np.std(rels)))
+        for name, (mean, std) in per_topo.items():
+            rows.append(dict(topology=name, area_mm2=area,
+                             power_rel_mean_pct=mean,
+                             power_rel_std_pct=std))
+    write_csv(os.path.join(RESULTS_DIR, "table2.csv"), rows)
+    return [r["power_rel_mean_pct"] for r in rows
+            if r["topology"] == "folded_hexa_torus"][1]
+
+
+def table3_properties(sizes=None):
+    """Table III: measured diameter/radix/link-range for all topologies."""
+    rows = []
+    for name in ALL_TOPOLOGIES:
+        for n in (64, 256):
+            if name in T.N_CONSTRAINTS and not T.N_CONSTRAINTS[name](n):
+                continue
+            t = T.build(name, n)
+            rows.append(dict(topology=name, n=n, diameter=t.diameter,
+                             radix=t.radix,
+                             max_link_range=int(t.link_ranges().max()),
+                             max_link_mm=round(t.max_link_length_mm(), 1)))
+    write_csv(os.path.join(RESULTS_DIR, "table3.csv"), rows)
+    return len(rows)
+
+
+def fig7_main(sizes=None, use_sim=False):
+    """Fig. 7: all topologies x {homo,hetero} x {organic,glass}."""
+    sizes = sizes or SIZES
+    rows = []
+    for substrate in ("organic", "glass"):
+        for roles, pattern in (("homogeneous", "uniform"),
+                               ("hetero_cm", "hetero_mix")):
+            for name in ALL_TOPOLOGIES:
+                for n in sizes:
+                    rows.append(evaluate(name, n, substrate, pattern,
+                                         roles=roles, use_sim=use_sim))
+    write_csv(os.path.join(RESULTS_DIR, "fig7.csv"), rows)
+    ok = [r for r in rows if r]
+    best = {}
+    for n in sizes:
+        sub = [r for r in ok if r["n"] == n and
+               r["substrate"] == "organic" and
+               r["pattern"] == "uniform"]
+        best[n] = max(sub, key=lambda r: r["abs_throughput_gbps"])[
+            "topology"]
+    return best
+
+
+def fig8_patterns(sizes=None, use_sim=False):
+    """Fig. 8: permutation / tornado / neighbor on glass, homogeneous."""
+    sizes = sizes or SIZES
+    rows = []
+    for pattern in ("permutation", "tornado", "neighbor"):
+        for name in ALL_TOPOLOGIES:
+            for n in sizes:
+                rows.append(evaluate(name, n, "glass", pattern,
+                                     use_sim=use_sim))
+    write_csv(os.path.join(RESULTS_DIR, "fig8.csv"), rows)
+    return sum(1 for r in rows if r)
+
+
+def fig10_traces(sizes=None, use_sim=False):
+    """Fig. 10: synthetic Netrace-like traces, C/M/I placement, organic."""
+    sizes = sizes or [64, 144]
+    rows = []
+    for profile in ("blackscholes", "fluidanimate"):
+        for region in range(5):
+            for name in ("mesh", "folded_torus", "hexamesh",
+                         "folded_hexa_torus", "kite_medium", "sid_mesh",
+                         "double_butterfly", "octamesh"):
+                for n in sizes:
+                    from repro.core.topology import build
+                    from .common import _routing
+                    topo, routing = _routing(name, n, "organic", 74.0,
+                                             "hetero_cmi")
+                    tm, intensity = TR.trace_region_traffic(
+                        topo, profile, region)
+                    t_r = routing.saturation_rate(tm)
+                    from repro.core.simulator import zero_load_latency
+                    lat = zero_load_latency(routing, tm)
+                    rows.append(dict(profile=profile, region=region,
+                                     topology=name, n=n,
+                                     intensity=intensity,
+                                     rel_throughput=t_r,
+                                     latency_ns=lat))
+    write_csv(os.path.join(RESULTS_DIR, "fig10.csv"), rows)
+    return len(rows)
+
+
+def collectives_bridge(sizes=None):
+    """Framework bridge: collective time under each ICI topology."""
+    rows = []
+    for name in ("mesh", "hexamesh", "folded_torus", "folded_hexa_torus"):
+        for n in (64, 256):
+            m = build_ici_model(name, n, "organic")
+            for s in (2 ** 24, 2 ** 30):
+                rows.append(dict(
+                    topology=name, n=n, bytes=s,
+                    allreduce_ms=1e3 * m.collective_time_s("all_reduce", s),
+                    allgather_ms=1e3 * m.collective_time_s("all_gather", s),
+                    b_eff_gbps=m.b_eff_gbps))
+    write_csv(os.path.join(RESULTS_DIR, "collectives.csv"), rows)
+    fht = [r for r in rows if r["topology"] == "folded_hexa_torus"
+           and r["n"] == 64 and r["bytes"] == 2 ** 30][0]
+    mesh = [r for r in rows if r["topology"] == "mesh"
+            and r["n"] == 64 and r["bytes"] == 2 ** 30][0]
+    return mesh["allreduce_ms"] / fht["allreduce_ms"]
+
+
+def roofline_summary(sizes=None):
+    """Framework roofline over the dry-run artifacts (if present)."""
+    import glob
+    from .roofline import analyze
+    for d in ("results/dryrun_opt", "results/dryrun"):
+        if glob.glob(os.path.join(d, "*.json")):
+            rows = [r for r in analyze(d) if r.get("ok")]
+            if not rows:
+                continue
+            best = max(rows, key=lambda r: r["roofline_fraction"])
+            n_mem = sum(r["dominant"] == "memory" for r in rows)
+            return (f"{len(rows)} cells ({d}); "
+                    f"{n_mem} memory-bound; best fraction "
+                    f"{best['roofline_fraction']:.3f} ({best['tag']})")
+    return "no dry-run artifacts (run repro.launch.dryrun first)"
+
+
+BENCHES = {
+    "fig2_linkmodel": fig2_linkmodel,
+    "table3_properties": table3_properties,
+    "table1_area": table1_area,
+    "fig4_principles": fig4_principles,
+    "table2_power": table2_power,
+    "fig7_main": fig7_main,
+    "fig8_patterns": fig8_patterns,
+    "fig10_traces": fig10_traces,
+    "collectives_bridge": collectives_bridge,
+    "roofline_summary": roofline_summary,
+}

@@ -1,0 +1,41 @@
+"""Quickstart: build FoldedHexaTorus, route it, simulate it, cost it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import topology as T, traffic as TR, costmodel as cm
+from repro.core.routing import build_routing, dependency_graph_is_acyclic
+from repro.core.simulator import SimConfig, saturation_throughput, \
+    zero_load_latency
+
+
+def main():
+    print("=== FoldedHexaTorus vs Mesh, 64 chiplets, organic substrate ===")
+    for name in ("mesh", "hexamesh", "folded_torus", "folded_hexa_torus"):
+        topo = T.build(name, 64, substrate="organic")
+        routing = build_routing(topo)
+        assert dependency_graph_is_acyclic(routing)
+        u = TR.uniform(topo)
+        t_r = routing.saturation_rate(u)
+        lat = zero_load_latency(routing, u)
+        _, hops, _ = routing.paths_channel_loads(u)
+        t_a = cm.absolute_throughput_gbps(topo, t_r)
+        print(f"{name:20s} diam={topo.diameter:2d} radix={topo.radix} "
+              f"maxlink={topo.max_link_length_mm():5.1f}mm "
+              f"T_r={t_r:.3f} flits/node/cyc  T_a={t_a/1e3:7.2f} Tb/s "
+              f"lat={lat:5.1f}ns")
+
+    print("\n=== cycle-accurate check (16 chiplets) ===")
+    topo = T.build("folded_hexa_torus", 16)
+    routing = build_routing(topo)
+    out = saturation_throughput(routing, TR.uniform(topo),
+                                SimConfig(cycles=1500, warmup=500),
+                                n_rates=5)
+    print(f"simulated saturation {out['sim_saturation']:.3f} "
+          f"(analytic bound {out['analytic_saturation']:.3f}), "
+          f"latency@sat {out['latency_at_sat']:.1f} cycles")
+
+
+if __name__ == "__main__":
+    main()

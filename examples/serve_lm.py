@@ -1,0 +1,15 @@
+"""Batched serving example: prefill + decode with KV/SSM caches.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-1.3b]
+"""
+import sys
+
+from repro.launch.serve import main
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not argv:
+        argv = ["--arch", "qwen3-1.7b", "--smoke", "--batch", "4",
+                "--prompt-len", "32", "--gen", "16"]
+    main(argv)

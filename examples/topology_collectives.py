@@ -1,0 +1,42 @@
+"""Paper -> framework bridge: what a training step's collectives cost
+under different chiplet-ICI topologies.
+
+Reads a dry-run artifact (all-reduce/all-gather bytes of the compiled
+sharded train step) and prices it under each ICI topology using the
+paper's saturation-throughput results.
+
+    PYTHONPATH=src python examples/topology_collectives.py \
+        [results/dryrun/qwen3_1_7b__train_4k__pod1.json]
+"""
+import glob
+import json
+import sys
+
+from repro.core.collectives import build_ici_model
+
+
+def main():
+    paths = sys.argv[1:] or sorted(
+        glob.glob("results/dryrun/*train_4k__pod1.json"))
+    if not paths:
+        print("no dry-run artifacts found — run repro.launch.dryrun first")
+        return
+    for path in paths[:4]:
+        rec = json.load(open(path))
+        if not rec.get("ok"):
+            continue
+        print(f"\n=== {rec['tag']} ===")
+        print(f"collective bytes/chip/step: "
+              f"{rec['collective_bytes_per_chip']/2**30:.2f} GiB")
+        for topo in ("mesh", "hexamesh", "folded_torus",
+                     "folded_hexa_torus"):
+            m = build_ici_model(topo, 64, "organic")
+            t = sum(m.collective_time_s(kind.replace("-", "_"),
+                                        v["bytes"])
+                    for kind, v in rec["collectives"].items())
+            print(f"  {topo:20s} B_eff={m.b_eff_gbps/1e3:6.2f} Tb/s  "
+                  f"step collective time ~ {t*1e3:8.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps on the synthetic pipeline (CPU-sized by default; pass
+--steps/--batch/--seq to scale up; on TPU the same driver takes the full
+config + production mesh).
+
+    PYTHONPATH=src python examples/train_lm.py            # quick demo
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --d-model 512 \
+        --layers 12 --batch 8 --seq 512                    # ~100M params
+"""
+import sys
+
+from repro.launch.train import main
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not argv:
+        argv = ["--arch", "qwen3-1.7b", "--smoke", "--steps", "60",
+                "--batch", "8", "--seq", "128", "--log-every", "10"]
+    main(argv)

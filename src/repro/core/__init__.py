@@ -1,0 +1,9 @@
+"""repro.core — the paper's contribution: FoldedHexaTorus and the ICI
+topology evaluation pipeline (topologies, routing, simulator, cost models,
+and the topology-aware collective model that plugs into the training
+framework's roofline analyzer)."""
+from .topology import Topology, build, GENERATORS, N_CONSTRAINTS  # noqa
+from .routing import Routing, build_routing, dependency_graph_is_acyclic  # noqa
+from .simulator import SimConfig, simulate, saturation_throughput, \
+    zero_load_latency  # noqa
+from . import traffic, costmodel, linkmodel, placement, collectives  # noqa

@@ -1,0 +1,80 @@
+"""Topology-aware collective cost model — the paper -> framework bridge.
+
+On a chiplet-based accelerator, the ICI topology determines the effective
+bandwidth available to the collectives a sharded training step issues.
+This module converts the paper's saturation-throughput results into
+per-collective time estimates, so the roofline analyzer can report the
+collective term *under each ICI topology* (`--ici-topology ...`).
+
+Model: the effective all-to-all bandwidth per chiplet is the topology's
+absolute saturation throughput T_a under uniform traffic (this bakes in
+diameter, radix->wire-budget, link length->data rate, and congestion).
+Ring-schedule lower bounds (Chan et al.) then give:
+
+    all_reduce(S)       = 2 * S * (N-1)/N / B_eff
+    all_gather(S)       =     S * (N-1)/N / B_eff
+    reduce_scatter(S)   =     S * (N-1)/N / B_eff
+    all_to_all(S)       =     S * (N-1)/N / B_eff   (uniform-traffic B_eff
+                                                     already includes the
+                                                     bisection penalty)
+
+plus a latency term  diameter * hop_latency * log2(N) for software
+pipelining depth.  S is the full buffer size in bytes per chiplet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from . import linkmodel as lm
+from . import costmodel, traffic
+from .routing import build_routing
+from .topology import Topology, build
+
+
+@dataclasses.dataclass
+class IciModel:
+    topology: str
+    n: int
+    substrate: str
+    b_eff_gbps: float          # per-chiplet effective bandwidth
+    diameter: int
+    hop_latency_ns: float
+
+    def collective_time_s(self, kind: str, bytes_per_chip: float) -> float:
+        n = self.n
+        factor = {"all_reduce": 2.0, "all_gather": 1.0,
+                  "reduce_scatter": 1.0, "all_to_all": 1.0,
+                  "collective_permute": 1.0 / max(n - 1, 1)}[kind]
+        bw_bytes = self.b_eff_gbps * 1e9 / 8.0
+        bw_term = factor * bytes_per_chip * (n - 1) / max(n, 1) / bw_bytes
+        lat_term = (self.diameter * self.hop_latency_ns * 1e-9 *
+                    np.log2(max(n, 2)))
+        return float(bw_term + lat_term)
+
+
+@functools.lru_cache(maxsize=64)
+def build_ici_model(topology: str = "folded_hexa_torus", n: int = 64,
+                    substrate: str = "organic") -> IciModel:
+    topo = build(topology, n, substrate=substrate)
+    r = build_routing(topo)
+    u = traffic.uniform(topo)
+    t_r = r.saturation_rate(u)           # analytic channel-load bound
+    t_a = costmodel.absolute_throughput_gbps(topo, t_r)
+    hop_ns = float(lm.ROUTER_LATENCY_NS + 2 * lm.PHY_LATENCY_NS +
+                   np.mean(lm.wire_latency_ns(topo.link_lengths_mm(),
+                                              substrate)))
+    return IciModel(topology=topology, n=n, substrate=substrate,
+                    b_eff_gbps=t_a, diameter=topo.diameter,
+                    hop_latency_ns=hop_ns)
+
+
+def compare_topologies(bytes_per_chip: float, kind: str = "all_reduce",
+                       n: int = 64, substrate: str = "organic",
+                       names=("mesh", "hexamesh", "folded_torus",
+                              "folded_hexa_torus")) -> dict[str, float]:
+    """Collective time (s) under each ICI topology — used by §Roofline."""
+    return {name: build_ici_model(name, n, substrate)
+            .collective_time_s(kind, bytes_per_chip) for name in names}

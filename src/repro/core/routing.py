@@ -1,0 +1,293 @@
+"""Deadlock-free shortest-path routing on arbitrary ICI topologies.
+
+This is the paper's §V-B recipe: a custom routing algorithm based on
+Dijkstra's algorithm, incorporating the turn model [34], a simple
+cycle-breaking algorithm [35], and a dual-graph construction [36]:
+
+  1. **Cycle breaking / turn prohibition** — nodes are BFS-labelled from a
+     central root; a directed channel u->v is *up* if it decreases the
+     (depth, id) label.  Turns *down->up* are prohibited (up*/down*
+     ordering), which makes the channel-dependency graph acyclic and hence
+     the routing deadlock-free on any connected topology.
+  2. **Dual graph** — vertices are directed channels (plus one virtual
+     ejection vertex per node); edges are the *allowed* turns.
+  3. **Dijkstra** — run from every destination's ejection vertex over the
+     reversed dual graph; the routing table then maps
+     (destination, current node, input channel) -> output port by greedy
+     descent on the dual-graph distance.
+
+The module also provides the *analytic* channel-load throughput bound used
+as a fast cross-check of the cycle-accurate simulator: for a traffic
+matrix P (rows sum to 1), the expected per-channel load at unit injection
+is  load_e = sum_{s,d} P[s,d] * [e on path(s,d)]  and the saturation
+injection rate is  min(1, 1/max_e load_e)  flits/node/cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import scipy.sparse as sp
+import scipy.sparse.csgraph as csgraph
+
+from .topology import Topology
+from . import linkmodel as lm
+
+
+@dataclasses.dataclass
+class Routing:
+    topo: Topology
+    # directed channels
+    ch_src: np.ndarray          # [C] source node of channel
+    ch_dst: np.ndarray          # [C] destination node
+    ch_len_mm: np.ndarray       # [C] physical length
+    ch_out_port: np.ndarray     # [C] output-port index at src
+    ch_in_port: np.ndarray      # [C] input-port index at dst
+    out_ch: np.ndarray          # [N, P] channel id per output port (-1 pad)
+    in_ch: np.ndarray           # [N, P] channel id per input port (-1 pad)
+    n_ports: np.ndarray         # [N] real (non-virtual) port count
+    # routing table: [dst, node, in_port(+1 for injection)] -> out port
+    # value == EJECT means deliver locally; -1 means unused/unreachable.
+    table: np.ndarray
+    prohibited_turns: int
+    total_turns: int
+
+    EJECT: int = -2
+
+    @property
+    def n_channels(self) -> int:
+        return len(self.ch_src)
+
+    @property
+    def max_ports(self) -> int:
+        return self.out_ch.shape[1]
+
+    # -- path following ------------------------------------------------
+    def paths_channel_loads(self, traffic: np.ndarray,
+                            max_hops: int | None = None):
+        """Follow the routing table for all (s, d) pairs simultaneously.
+
+        traffic: [N, N] matrix, rows sum to 1 (diagonal ignored).
+        Returns (loads[C], hops[N, N], lat_cycles[N, N]).
+        """
+        topo, n = self.topo, self.topo.n
+        if max_hops is None:
+            max_hops = 4 * topo.n  # safe upper bound; loops would exceed it
+        hop_cy = lm.hop_latency_cycles(self.ch_len_mm, topo.substrate)
+
+        s_idx, d_idx = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+        s_idx, d_idx = s_idx.ravel(), d_idx.ravel()
+        alive = s_idx != d_idx
+        cur = s_idx.copy()
+        in_port = np.full(n * n, self.max_ports, dtype=np.int32)  # injection
+        loads = np.zeros(self.n_channels)
+        hops = np.zeros(n * n, dtype=np.int32)
+        lat = np.zeros(n * n, dtype=np.float64)
+        w = traffic[s_idx, d_idx]
+
+        for _ in range(max_hops):
+            if not alive.any():
+                break
+            out_port = self.table[d_idx[alive], cur[alive], in_port[alive]]
+            if (out_port < 0).any():
+                bad = np.where(out_port < 0)[0]
+                raise RuntimeError(
+                    f"routing table dead end for "
+                    f"{(s_idx[alive][bad[0]], d_idx[alive][bad[0]])}")
+            ch = self.out_ch[cur[alive], out_port]
+            np.add.at(loads, ch, w[alive])
+            hops[alive] += 1
+            lat[alive] += hop_cy[ch]
+            cur_new = self.ch_dst[ch]
+            in_port_new = self.ch_in_port[ch]
+            cur[alive] = cur_new
+            in_port[alive] = in_port_new
+            arrived = cur == d_idx
+            alive = alive & ~arrived
+        if alive.any():
+            raise RuntimeError("routing did not converge (livelock?)")
+        return loads, hops.reshape(n, n), lat.reshape(n, n)
+
+    def saturation_rate(self, traffic: np.ndarray) -> float:
+        """Analytic saturation injection rate (flits/node/cycle)."""
+        loads, _, _ = self.paths_channel_loads(traffic)
+        max_load = loads.max()
+        # ejection bottleneck: a node cannot absorb more than 1 flit/cycle
+        ej_load = traffic.sum(axis=0).max()
+        return float(min(1.0 / max(max_load, 1e-12),
+                         1.0 / max(ej_load, 1e-12), 1.0))
+
+    def restricted_hops(self) -> np.ndarray:
+        u = np.ones((self.topo.n, self.topo.n))
+        np.fill_diagonal(u, 0.0)
+        rs = u.sum(1, keepdims=True)
+        _, hops, _ = self.paths_channel_loads(u / np.maximum(rs, 1))
+        return hops
+
+
+def build_routing(topo: Topology, root: int | None = None,
+                  sweep_roots: bool = False,
+                  include_orderings: bool = False) -> Routing:
+    """Build deadlock-free routing.
+
+    Default (root=None): BFS up*/down* from the central chiplet — ONE
+    uniform policy for every topology, mirroring the paper's §V-B setup
+    (their comparison holds the routing methodology fixed).
+
+    sweep_roots=True tries several spanning-tree roots and keeps the one
+    with the highest uniform saturation; include_orderings=True also
+    tries coordinate-lexicographic channel orderings.  Both lift
+    individual topologies substantially (EXPERIMENTS.md §I7) but amount
+    to per-topology routing tuning, so they are opt-in diagnostics, not
+    the default evaluation.
+    """
+    if root is None and not sweep_roots:
+        center = int(np.argmin(((topo.pos - topo.pos.mean(0)) ** 2)
+                               .sum(-1)))
+        return _build_routing_rooted(topo, center)
+    if root is None:
+        n = topo.n
+        center = int(np.argmin(((topo.pos - topo.pos.mean(0)) ** 2)
+                               .sum(-1)))
+        candidates: list = sorted({0, center, n // 2, n // 4, n - 1})
+        builds = [lambda c=c: _build_routing_rooted(topo, c)
+                  for c in candidates]
+        if include_orderings:
+            xy = np.lexsort((topo.pos[:, 0], topo.pos[:, 1]))
+            yx = np.lexsort((topo.pos[:, 1], topo.pos[:, 0]))
+            lab_xy = np.empty(n)
+            lab_xy[xy] = np.arange(n)
+            lab_yx = np.empty(n)
+            lab_yx[yx] = np.arange(n)
+            builds += [lambda lab=lab: _build_routing_rooted(topo, 0,
+                                                             labels=lab)
+                       for lab in (lab_xy, lab_yx)]
+        best, best_rate = None, -1.0
+        u = np.ones((n, n))
+        np.fill_diagonal(u, 0.0)
+        u /= np.maximum(u.sum(1, keepdims=True), 1)
+        for make in builds:
+            try:
+                r = make()
+                rate = r.saturation_rate(u)     # raises on dead ends
+            except RuntimeError:
+                continue   # ordering invalid for this topology — skip
+            if rate > best_rate:
+                best, best_rate = r, rate
+        assert best is not None, "no valid routing found"
+        return best
+    return _build_routing_rooted(topo, root)
+
+
+def _build_routing_rooted(topo: Topology, root: int,
+                          labels: np.ndarray | None = None) -> Routing:
+    n, edges = topo.n, topo.edges
+    # ---- directed channels and port maps -------------------------------
+    ch_src = np.concatenate([edges[:, 0], edges[:, 1]]).astype(np.int32)
+    ch_dst = np.concatenate([edges[:, 1], edges[:, 0]]).astype(np.int32)
+    pmm = topo.pos_mm()
+    ch_len = np.sqrt(((pmm[ch_src] - pmm[ch_dst]) ** 2).sum(-1))
+    C = len(ch_src)
+
+    order = np.lexsort((ch_dst, ch_src))
+    # per-node port indices (output side)
+    ch_out_port = np.zeros(C, dtype=np.int32)
+    out_counts = np.zeros(n, dtype=np.int32)
+    for c in order:
+        ch_out_port[c] = out_counts[ch_src[c]]
+        out_counts[ch_src[c]] += 1
+    in_counts = np.zeros(n, dtype=np.int32)
+    ch_in_port = np.zeros(C, dtype=np.int32)
+    order_in = np.lexsort((ch_src, ch_dst))
+    for c in order_in:
+        ch_in_port[c] = in_counts[ch_dst[c]]
+        in_counts[ch_dst[c]] += 1
+    P = int(max(out_counts.max(), in_counts.max()))
+    out_ch = np.full((n, P), -1, dtype=np.int32)
+    in_ch = np.full((n, P), -1, dtype=np.int32)
+    out_ch[ch_src, ch_out_port] = np.arange(C)
+    in_ch[ch_dst, ch_in_port] = np.arange(C)
+
+    # ---- up/down labels (cycle breaking) --------------------------------
+    adj = topo.adjacency()
+    if labels is None:
+        depth = csgraph.shortest_path(adj, unweighted=True, indices=root)
+        label = depth * n + np.arange(n)       # (depth, id) lexicographic
+    else:
+        label = np.asarray(labels, dtype=np.float64)
+    ch_is_up = label[ch_dst] < label[ch_src]
+
+    # ---- dual graph ------------------------------------------------------
+    # vertices: channels [0, C), ejection vertices [C, C+n)
+    rows, cols, wts = [], [], []
+    n_turns = n_prohibited = 0
+    for c1 in range(C):
+        v = ch_dst[c1]
+        for p in range(P):
+            c2 = out_ch[v, p]
+            if c2 < 0:
+                continue
+            if ch_dst[c2] == ch_src[c1]:
+                continue                        # no u-turns
+            n_turns += 1
+            if (not ch_is_up[c1]) and ch_is_up[c2]:
+                n_prohibited += 1               # down -> up prohibited
+                continue
+            rows.append(c1), cols.append(c2), wts.append(1.0)
+    for c in range(C):                          # channel -> ejection at dst
+        rows.append(c), cols.append(C + ch_dst[c]), wts.append(0.0)
+    dual = sp.csr_matrix((wts, (rows, cols)), shape=(C + n, C + n))
+
+    # distance from every channel to every destination's ejection vertex:
+    # Dijkstra on the reversed dual graph, sources = ejection vertices.
+    dist = csgraph.dijkstra(dual.T, indices=np.arange(C, C + n))  # [n, C+n]
+    dist = dist[:, :C]                          # to-dst distance per channel
+
+    # ---- routing table ---------------------------------------------------
+    # table[d, u, in_port]: in_port == P means freshly injected at u.
+    table = np.full((n, n, P + 1), -1, dtype=np.int16)
+    big = np.inf
+    for d in range(n):
+        cand = np.where(out_ch >= 0, 1.0 + dist[d][np.maximum(out_ch, 0)],
+                        big)                    # [n, P]
+        # injected packets: all turns allowed
+        inj_port = np.argmin(cand, axis=1)
+        ok = cand[np.arange(n), inj_port] < big
+        table[d, :, P] = np.where(ok, inj_port, -1)
+    # arrived-via-channel entries: restrict to allowed turns
+    allowed = (dual[:C, :C].toarray() > 0)      # [C, C] allowed turns
+    for c1 in range(C):
+        v = ch_dst[c1]
+        costs = np.full((n, P), big)
+        for p in range(P):
+            c2 = out_ch[v, p]
+            if c2 >= 0 and allowed[c1, c2]:
+                costs[:, p] = 1.0 + dist[:, c2]
+        p_best = np.argmin(costs, axis=1)       # [n] best port per dst
+        valid = costs[np.arange(n), p_best] < big
+        table[:, v, ch_in_port[c1]] = np.where(valid, p_best, -1)
+    for d in range(n):
+        table[d, d, :] = Routing.EJECT
+
+    return Routing(topo=topo, ch_src=ch_src, ch_dst=ch_dst, ch_len_mm=ch_len,
+                   ch_out_port=ch_out_port, ch_in_port=ch_in_port,
+                   out_ch=out_ch, in_ch=in_ch, n_ports=out_counts,
+                   table=table, prohibited_turns=n_prohibited,
+                   total_turns=n_turns)
+
+
+def dependency_graph_is_acyclic(r: Routing) -> bool:
+    """Check the *used* channel-dependency graph is a DAG (deadlock-free)."""
+    import networkx as nx
+    g = nx.DiGraph()
+    n, P = r.topo.n, r.max_ports
+    # add an edge c1 -> c2 whenever the table can chain them
+    for d in range(n):
+        for c1 in range(r.n_channels):
+            v = r.ch_dst[c1]
+            p = r.table[d, v, r.ch_in_port[c1]]
+            if p >= 0:
+                c2 = r.out_ch[v, p]
+                if c2 >= 0:
+                    g.add_edge(c1, c2)
+    return nx.is_directed_acyclic_graph(g)

@@ -1,0 +1,350 @@
+"""Cycle-based ICI network simulator, vectorized in JAX (paper §V-B).
+
+BookSim semantics re-expressed as dense array updates so the whole
+simulation `lax.scan`s over cycles and `vmap`s over injection rates:
+
+  * input-queued routers, V virtual channels x B-flit buffers per input
+    port (paper: 4 x 4),
+  * credit-based flow control with wire-delayed credit return,
+  * two-phase separable switch allocation (rotating priority; an input
+    port forwards at most one flit per cycle, an output port accepts at
+    most one),
+  * per-channel link pipelines whose depth is the Table-IV hop latency
+    (router 3 ns + 2 PHY x 2 ns + wire ceil(L*sqrt(eps_r)/c)), cycle=1 ns,
+  * one injection queue and one ejection port per chiplet (1 flit/cycle).
+
+Packets are single-flit; multi-flit data packets are injected as bursts
+(§V-E traces), which approximates wormhole serialization without ownership
+state.  Saturation throughput is measured as the plateau of delivered
+throughput over an offered-rate sweep (vmapped), the same quantity BookSim
+reports as relative throughput T_r.
+
+The pure-jnp router allocation (`router_phase`) also serves as the
+reference oracle for the Pallas `netstep` kernel (see repro/kernels).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import linkmodel as lm
+from .routing import Routing
+
+INF = jnp.int32(2 ** 30)
+
+
+class SimConfig(NamedTuple):
+    n_vcs: int = 4
+    buf_depth: int = 4
+    cycles: int = 3000
+    warmup: int = 1000
+    seed: int = 0
+
+
+class SimState(NamedTuple):
+    buf_dst: jnp.ndarray     # [N, PI, V, B] destination (or -1)
+    buf_t: jnp.ndarray       # [N, PI, V, B] injection cycle
+    head: jnp.ndarray        # [N, PI, V]
+    cnt: jnp.ndarray         # [N, PI, V]
+    credits: jnp.ndarray     # [N, P, V]
+    link_dst: jnp.ndarray    # [C, D]
+    link_t: jnp.ndarray      # [C, D]
+    link_vc: jnp.ndarray     # [C, D]
+    credit_pipe: jnp.ndarray  # [C, D, V]
+    rr: jnp.ndarray          # [] rotating priority
+    delivered: jnp.ndarray   # []
+    lat_sum: jnp.ndarray     # [] float32
+    offered: jnp.ndarray     # []
+    accepted: jnp.ndarray    # []
+
+
+@dataclasses.dataclass
+class SimSpec:
+    """Static simulator inputs derived from a Routing + traffic matrix."""
+    n: int
+    p: int                  # max real ports
+    c: int                  # directed channels
+    d: int                  # link pipeline ring depth
+    table: np.ndarray       # [N_dst, N, P+1] -> out port, EJECT=-2
+    out_ch: np.ndarray      # [N, P]
+    in_ch: np.ndarray       # [N, P]
+    ch_dst: np.ndarray      # [C]
+    ch_in_port: np.ndarray  # [C]
+    ch_src: np.ndarray
+    ch_out_port: np.ndarray
+    ch_depth: np.ndarray    # [C] pipeline depth (cycles per hop)
+    traffic_cum: np.ndarray  # [N, N] cumulative traffic rows
+    inj_weight: np.ndarray   # [N] relative injection rate per node
+
+
+def make_spec(routing: Routing, traffic: np.ndarray) -> SimSpec:
+    depth = lm.hop_latency_cycles(routing.ch_len_mm, routing.topo.substrate)
+    depth = np.maximum(np.asarray(depth, np.int32), 1)
+    d = int(depth.max()) + 1
+    rows = traffic.sum(axis=1)
+    inj_weight = rows / max(rows.max(), 1e-12)
+    cum = np.cumsum(traffic, axis=1)
+    cum = cum / np.maximum(cum[:, -1:], 1e-12)
+    cum[rows <= 0] = 1.0   # inert sources: any draw maps to dst 0, gated off
+    return SimSpec(
+        n=routing.topo.n, p=routing.max_ports, c=routing.n_channels, d=d,
+        table=routing.table, out_ch=routing.out_ch, in_ch=routing.in_ch,
+        ch_dst=routing.ch_dst, ch_in_port=routing.ch_in_port,
+        ch_src=routing.ch_src, ch_out_port=routing.ch_out_port,
+        ch_depth=depth, traffic_cum=cum, inj_weight=inj_weight)
+
+
+def init_state(spec: SimSpec, cfg: SimConfig) -> SimState:
+    N, P, V, B, C, D = (spec.n, spec.p, cfg.n_vcs, cfg.buf_depth,
+                        spec.c, spec.d)
+    PI = P + 1
+    z = jnp.zeros
+    return SimState(
+        buf_dst=jnp.full((N, PI, V, B), -1, jnp.int32),
+        buf_t=z((N, PI, V, B), jnp.int32),
+        head=z((N, PI, V), jnp.int32),
+        cnt=z((N, PI, V), jnp.int32),
+        credits=jnp.full((N, P, V), B, jnp.int32),
+        link_dst=jnp.full((C, D), -1, jnp.int32),
+        link_t=z((C, D), jnp.int32),
+        link_vc=z((C, D), jnp.int32),
+        credit_pipe=z((C, D, V), jnp.int32),
+        rr=jnp.int32(0),
+        delivered=z((), jnp.int32), lat_sum=z((), jnp.float32),
+        offered=z((), jnp.int32), accepted=z((), jnp.int32),
+    )
+
+
+def router_phase(table, out_ch_pad_credits, head_dst, cnt, rr,
+                 n: int, p: int, v: int):
+    """Route + two-phase separable allocation (pure jnp; Pallas oracle).
+
+    table: [N_dst, N, PI]; out_ch_pad_credits: [N, P+1, V] credits with an
+    INF ejection column appended.  Returns (win_mask [N,PI,V],
+    out_req [N,PI] in [0..P] or -1, vc_choice [N,PI], port_wins [N,PI]).
+    """
+    N, P, V = n, p, v
+    PI = P + 1
+    node_idx = jnp.arange(N)[:, None, None]
+    port_idx = jnp.arange(PI)[None, :, None]
+    vcs = jnp.arange(V)[None, None, :]
+
+    valid = cnt > 0
+    dst = jnp.where(valid, head_dst, 0)
+    op = table[dst, node_idx, port_idx]            # [N, PI, V]
+    op = jnp.where(valid, op, -3)
+    is_eject = op == Routing.EJECT
+    op_slot = jnp.where(is_eject, P, op)           # [N, PI, V]
+
+    have_credit = out_ch_pad_credits[
+        node_idx, jnp.clip(op_slot, 0, P), vcs] > 0
+    eligible = valid & (op_slot >= 0) & (have_credit | is_eject)
+
+    # phase a: each input port picks one eligible VC (rotating priority)
+    vc_score = jnp.where(eligible, (vcs - rr) % V, INF)
+    vc_choice = jnp.argmin(vc_score, axis=2)       # [N, PI]
+    port_ok = jnp.min(vc_score, axis=2) < INF
+    out_req = jnp.where(
+        port_ok,
+        jnp.take_along_axis(op_slot, vc_choice[..., None], axis=2)[..., 0],
+        -1)                                        # [N, PI]
+
+    # phase b: each output slot picks one requesting input port
+    p_score = (jnp.arange(PI)[None, :] - rr) % PI  # [1, PI]
+    req_1h = jax.nn.one_hot(jnp.where(out_req >= 0, out_req, PI),
+                            PI + 1, dtype=jnp.bool_)[:, :, :PI]  # [N,PI,PI]
+    scores = jnp.where(req_1h, p_score[:, :, None], INF)  # [N, PI(in), PI(out)]
+    win_p = jnp.argmin(scores, axis=1)             # [N, PI(out)]
+    win_ok = jnp.min(scores, axis=1) < INF
+
+    # scatter wins back onto input ports; invalid wins go to a dump column
+    win_p_safe = jnp.where(win_ok, win_p, PI)
+    won = jnp.zeros((N, PI + 1), jnp.bool_)
+    won = won.at[jnp.arange(N)[:, None], win_p_safe].set(win_ok)
+    port_wins = won[:, :PI] & port_ok              # [N, PI]
+    win_mask = (jax.nn.one_hot(vc_choice, V, dtype=jnp.bool_)
+                & eligible & port_wins[:, :, None])
+    return win_mask, out_req, vc_choice, port_wins
+
+
+def _build_runner(spec: SimSpec, cfg: SimConfig):
+    """Return a jitted fn rate -> (throughput, latency, offered, accepted)."""
+    N, P, V, B, C, D = (spec.n, spec.p, cfg.n_vcs, cfg.buf_depth,
+                        spec.c, spec.d)
+    PI = P + 1
+    table = jnp.asarray(spec.table)
+    out_ch = jnp.asarray(spec.out_ch)
+    in_ch = jnp.asarray(spec.in_ch)
+    ch_dst = jnp.asarray(spec.ch_dst)
+    ch_in_port = jnp.asarray(spec.ch_in_port)
+    ch_src = jnp.asarray(spec.ch_src)
+    ch_out_port = jnp.asarray(spec.ch_out_port)
+    ch_depth = jnp.asarray(spec.ch_depth)
+    traffic_cum = jnp.asarray(spec.traffic_cum)
+    inj_weight = jnp.asarray(spec.inj_weight, jnp.float32)
+    base_key = jax.random.PRNGKey(cfg.seed)
+    nn = jnp.arange(N)[:, None]
+    pp = jnp.arange(PI)[None, :]
+    node_r = jnp.arange(N)
+
+    def step(state: SimState, t_rate):
+        t, rate = t_rate
+        slot = t % D
+        measuring = t >= cfg.warmup
+
+        # ---- 1. link deliveries -> input buffers ----------------------
+        arr_dst = state.link_dst[:, slot]            # [C]
+        arr_ok = arr_dst >= 0
+        arr_vc = state.link_vc[:, slot]
+        pos = (state.head[ch_dst, ch_in_port, arr_vc] +
+               state.cnt[ch_dst, ch_in_port, arr_vc]) % B
+        buf_dst = state.buf_dst.at[ch_dst, ch_in_port, arr_vc, pos].set(
+            jnp.where(arr_ok, arr_dst,
+                      state.buf_dst[ch_dst, ch_in_port, arr_vc, pos]))
+        buf_t = state.buf_t.at[ch_dst, ch_in_port, arr_vc, pos].set(
+            jnp.where(arr_ok, state.link_t[:, slot],
+                      state.buf_t[ch_dst, ch_in_port, arr_vc, pos]))
+        cnt = state.cnt.at[ch_dst, ch_in_port, arr_vc].add(
+            arr_ok.astype(jnp.int32))
+        link_dst = state.link_dst.at[:, slot].set(-1)
+
+        # ---- 2. credit returns ----------------------------------------
+        credits = state.credits.at[ch_src, ch_out_port].add(
+            state.credit_pipe[:, slot])
+        credit_pipe = state.credit_pipe.at[:, slot].set(0)
+
+        # ---- 3. injection ----------------------------------------------
+        key = jax.random.fold_in(base_key, t)
+        k1, k2, k3 = jax.random.split(key, 3)
+        want = jax.random.uniform(k1, (N,)) < rate * inj_weight
+        u = jax.random.uniform(k2, (N,))
+        dsts = jnp.sum(traffic_cum < u[:, None], axis=1).astype(jnp.int32)
+        dsts = jnp.clip(dsts, 0, N - 1)
+        vcs_inj = jax.random.randint(k3, (N,), 0, V)
+        want &= dsts != node_r
+        space = cnt[node_r, P, vcs_inj] < B
+        do_inj = want & space
+        posi = (state.head[node_r, P, vcs_inj] + cnt[node_r, P, vcs_inj]) % B
+        buf_dst = buf_dst.at[node_r, P, vcs_inj, posi].set(
+            jnp.where(do_inj, dsts, buf_dst[node_r, P, vcs_inj, posi]))
+        buf_t = buf_t.at[node_r, P, vcs_inj, posi].set(
+            jnp.where(do_inj, t, buf_t[node_r, P, vcs_inj, posi]))
+        cnt = cnt.at[node_r, P, vcs_inj].add(do_inj.astype(jnp.int32))
+        m32 = measuring.astype(jnp.int32)
+        offered = state.offered + m32 * jnp.sum(want.astype(jnp.int32))
+        accepted = state.accepted + m32 * jnp.sum(do_inj.astype(jnp.int32))
+
+        # ---- 4. route + allocate ---------------------------------------
+        head_dst = jnp.take_along_axis(
+            buf_dst, state.head[..., None], axis=3)[..., 0]
+        head_t = jnp.take_along_axis(
+            buf_t, state.head[..., None], axis=3)[..., 0]
+        cred_pad = jnp.concatenate(
+            [credits, jnp.full((N, 1, V), INF, jnp.int32)], axis=1)
+        win_mask, out_req, vc_choice, port_wins = router_phase(
+            table, cred_pad, head_dst, cnt, state.rr, N, P, V)
+
+        # ---- 5. winners: pop, move, credit ------------------------------
+        win_any = port_wins                        # [N, PI]
+        wvc = vc_choice
+        w_dst = head_dst[nn, pp, wvc]
+        w_t = head_t[nn, pp, wvc]
+        head = (state.head.at[nn, pp, wvc]
+                .add(win_any.astype(jnp.int32))) % B
+        cnt = cnt.at[nn, pp, wvc].add(-win_any.astype(jnp.int32))
+
+        # upstream credit return for real input ports
+        up_ch = in_ch[nn, jnp.clip(pp, 0, P - 1)]  # [N, PI]
+        has_up = (pp < P) & (up_ch >= 0) & win_any
+        up_ch_s = jnp.maximum(up_ch, 0)
+        ret_slot = (t + ch_depth[up_ch_s]) % D
+        credit_pipe = credit_pipe.at[up_ch_s, ret_slot, wvc].add(
+            has_up.astype(jnp.int32))
+
+        # ejection vs traversal
+        eject = win_any & (out_req == P)
+        traverse = win_any & (out_req >= 0) & (out_req < P)
+        delivered = state.delivered + m32 * jnp.sum(eject.astype(jnp.int32))
+        lat_sum = state.lat_sum + measuring.astype(jnp.float32) * jnp.sum(
+            jnp.where(eject, (t - w_t).astype(jnp.float32), 0.0))
+
+        out_c = out_ch[nn, jnp.clip(out_req, 0, P - 1)]
+        oc = jnp.where(traverse, out_c, -1).ravel()
+        ok = traverse.ravel()
+        oc_s = jnp.maximum(oc, 0)
+        wslot = (t + ch_depth[oc_s]) % D
+        link_dst = link_dst.at[oc_s, wslot].set(
+            jnp.where(ok, w_dst.ravel(), link_dst[oc_s, wslot]))
+        link_t = state.link_t.at[oc_s, wslot].set(
+            jnp.where(ok, w_t.ravel(), state.link_t[oc_s, wslot]))
+        link_vc = state.link_vc.at[oc_s, wslot].set(
+            jnp.where(ok, wvc.ravel(), state.link_vc[oc_s, wslot]))
+        credits = credits.at[nn, jnp.clip(out_req, 0, P - 1), wvc].add(
+            -traverse.astype(jnp.int32))
+
+        new_state = SimState(
+            buf_dst=buf_dst, buf_t=buf_t, head=head, cnt=cnt,
+            credits=credits, link_dst=link_dst, link_t=link_t,
+            link_vc=link_vc, credit_pipe=credit_pipe,
+            rr=(state.rr + 1) % (V * PI),
+            delivered=delivered, lat_sum=lat_sum, offered=offered,
+            accepted=accepted)
+        return new_state, None
+
+    def run_one(rate):
+        state = init_state(spec, cfg)
+        ts = jnp.arange(cfg.cycles)
+        rates = jnp.full((cfg.cycles,), rate)
+        state, _ = jax.lax.scan(step, state, (ts, rates))
+        meas = cfg.cycles - cfg.warmup
+        thr = state.delivered / (N * meas)
+        lat = state.lat_sum / jnp.maximum(state.delivered, 1)
+        off = state.offered / (N * meas)
+        acc = state.accepted / (N * meas)
+        return thr, lat, off, acc
+
+    return jax.jit(jax.vmap(run_one))
+
+
+def simulate(routing: Routing, traffic: np.ndarray, rates,
+             cfg: SimConfig = SimConfig()):
+    """Run the simulator for a sweep of injection rates (vmapped).
+
+    Returns dict of numpy arrays: delivered throughput (flits/node/cycle),
+    avg packet latency (cycles), offered and accepted rates.
+    """
+    spec = make_spec(routing, traffic)
+    runner = _build_runner(spec, cfg)
+    thr, lat, off, acc = runner(jnp.asarray(rates, jnp.float32))
+    return dict(rate=np.asarray(rates), throughput=np.asarray(thr),
+                latency=np.asarray(lat), offered=np.asarray(off),
+                accepted=np.asarray(acc))
+
+
+def saturation_throughput(routing: Routing, traffic: np.ndarray,
+                          cfg: SimConfig = SimConfig(),
+                          n_rates: int = 8) -> dict:
+    """Saturation = plateau of delivered throughput over an offered sweep.
+
+    The sweep is seeded by the analytic channel-load bound and refined
+    around it.
+    """
+    analytic = routing.saturation_rate(traffic)
+    hi = min(1.0, 2.0 * analytic)
+    rates = np.linspace(max(analytic * 0.25, 1e-3), hi, n_rates)
+    res = simulate(routing, traffic, rates, cfg)
+    i = int(np.argmax(res["throughput"]))
+    return dict(sim_saturation=float(res["throughput"][i]),
+                analytic_saturation=float(analytic),
+                latency_at_sat=float(res["latency"][i]), sweep=res)
+
+
+def zero_load_latency(routing: Routing, traffic: np.ndarray) -> float:
+    """Analytic average packet latency at zero load (cycles)."""
+    _, hops, lat = routing.paths_channel_loads(traffic)
+    w = traffic / max(traffic.sum(), 1e-12)
+    return float((lat * w).sum())

@@ -1,0 +1,28 @@
+"""Public wrapper: [B, T, H, hd] attention -> Pallas flash kernel.
+
+interpret=True on CPU (validation); compiled Mosaic path on TPU.
+"""
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None):
+    """q: [B,Tq,H,hd]; k,v: [B,Tk,KV,hd] — GQA broadcast then kernel."""
+    b, tq, h, hd = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    tk = k.shape[1]
+    qb = q.transpose(0, 2, 1, 3).reshape(b * h, tq, hd)
+    kb = k.transpose(0, 2, 1, 3).reshape(b * h, tk, hd)
+    vb = v.transpose(0, 2, 1, 3).reshape(b * h, tk, hd)
+    ob = flash_attention_bhsd(qb, kb, vb, causal=causal, window=window,
+                              interpret=_interpret())
+    return ob.reshape(b, h, tq, hd).transpose(0, 2, 1, 3)

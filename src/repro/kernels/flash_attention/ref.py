@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """q: [BH, Tq, hd], k/v: [BH, Tk, hd] — exact softmax attention."""
+    bh, tq, hd = q.shape
+    tk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    qp = jnp.arange(tq)[:, None]
+    kp = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,99 @@
+"""The ICI simulator's switch-allocation step as a Pallas TPU kernel —
+the paper-specific hot loop (repro.core.simulator executes this every
+simulated cycle for every router).
+
+Two-phase separable allocation over a tile of routers:
+  phase a — each input port picks its best eligible VC (rotating
+            priority argmin over the V lane),
+  phase b — each output slot picks one requesting input port.
+
+Inputs per router tile [BN, PI, V]: op_slot (requested output slot per
+head flit, -1 if none) and eligible (credit/validity mask); plus the
+scalar rotating-priority counter.  Outputs: win_mask [BN, PI, V] and the
+chosen vc / out-slot per port.  Pure vector ops (masked min/argmin,
+one-hot compares) — VPU work, no MXU — tiled so a router block's state
+fits VMEM even for radix-31 topologies (FlattenedButterfly at N=256).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = 2 ** 30   # python literal: jnp constants would be captured consts
+
+
+def _netstep_kernel(op_slot_ref, eligible_ref, rr_ref, win_ref, vc_ref,
+                    req_ref, *, n_out: int):
+    op_slot = op_slot_ref[...]                 # [BN, PI, V] int32
+    eligible = eligible_ref[...]               # [BN, PI, V] bool
+    rr = rr_ref[0]
+    bn, pi, v = op_slot.shape
+
+    # phase a: rotating-priority VC choice per input port
+    vcs = jax.lax.broadcasted_iota(jnp.int32, (bn, pi, v), 2)
+    vc_score = jnp.where(eligible, (vcs - rr) % v, INF)
+    best = jnp.min(vc_score, axis=2)                      # [BN, PI]
+    vc_choice = jnp.argmin(vc_score, axis=2).astype(jnp.int32)
+    port_ok = best < INF
+    sel = jax.nn.one_hot(vc_choice, v, dtype=jnp.bool_)
+    out_req = jnp.where(
+        port_ok,
+        jnp.sum(jnp.where(sel, op_slot, 0), axis=2), -1)  # [BN, PI]
+
+    # phase b: each output slot takes the lowest-priority-score requester
+    ports = jax.lax.broadcasted_iota(jnp.int32, (bn, pi), 1)
+    p_score = (ports - rr) % pi                           # [BN, PI]
+    win = jnp.zeros((bn, pi), jnp.bool_)
+    for o in range(n_out):                                # static radix
+        req_o = out_req == o
+        score_o = jnp.where(req_o, p_score, INF)
+        m = jnp.min(score_o, axis=1, keepdims=True)
+        win_o = req_o & (score_o == m) & (m < INF)
+        # strict one-winner: lowest port index among score ties
+        first = jnp.cumsum(win_o.astype(jnp.int32), axis=1)
+        win_o &= first == 1
+        win |= win_o
+    win_mask = sel & eligible & win[:, :, None]
+    win_ref[...] = win_mask
+    vc_ref[...] = vc_choice
+    req_ref[...] = out_req
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def netstep_pallas(op_slot, eligible, rr, *, block: int = 64,
+                   interpret: bool = False):
+    """op_slot: [N, PI, V] int32 (requested out slot, -1 none);
+    eligible: [N, PI, V] bool; rr: scalar int32.
+    Returns (win_mask [N,PI,V], vc_choice [N,PI], out_req [N,PI])."""
+    n, pi, v = op_slot.shape
+    pad = (-n) % block
+    if pad:
+        op_slot = jnp.pad(op_slot, ((0, pad), (0, 0), (0, 0)),
+                          constant_values=-1)
+        eligible = jnp.pad(eligible, ((0, pad), (0, 0), (0, 0)))
+    np_ = op_slot.shape[0]
+    kern = functools.partial(_netstep_kernel, n_out=pi)
+    win, vc, req = pl.pallas_call(
+        kern,
+        grid=(np_ // block,),
+        in_specs=[
+            pl.BlockSpec((block, pi, v), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, pi, v), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, pi, v), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, pi), lambda i: (i, 0)),
+            pl.BlockSpec((block, pi), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, pi, v), jnp.bool_),
+            jax.ShapeDtypeStruct((np_, pi), jnp.int32),
+            jax.ShapeDtypeStruct((np_, pi), jnp.int32),
+        ],
+        interpret=interpret,
+    )(op_slot, eligible, jnp.asarray([rr], jnp.int32))
+    return win[:n], vc[:n], req[:n]

@@ -1,0 +1,13 @@
+"""Public wrapper for the netstep Pallas kernel."""
+import jax
+
+from .netstep import netstep_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def netstep(op_slot, eligible, rr, *, block: int = 64):
+    return netstep_pallas(op_slot, eligible, rr, block=block,
+                          interpret=_interpret())

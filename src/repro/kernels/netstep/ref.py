@@ -1,0 +1,31 @@
+"""Oracle for the netstep kernel — mirrors the allocation arithmetic of
+repro.core.simulator.router_phase on pre-computed (op_slot, eligible)."""
+import jax
+import jax.numpy as jnp
+
+INF = jnp.int32(2 ** 30)
+
+
+def netstep_ref(op_slot, eligible, rr):
+    n, pi, v = op_slot.shape
+    vcs = jnp.arange(v)[None, None, :]
+    vc_score = jnp.where(eligible, (vcs - rr) % v, INF)
+    vc_choice = jnp.argmin(vc_score, axis=2).astype(jnp.int32)
+    port_ok = jnp.min(vc_score, axis=2) < INF
+    sel = jax.nn.one_hot(vc_choice, v, dtype=jnp.bool_)
+    out_req = jnp.where(port_ok,
+                        jnp.take_along_axis(op_slot,
+                                            vc_choice[..., None],
+                                            axis=2)[..., 0], -1)
+    p_score = (jnp.arange(pi)[None, :] - rr) % pi
+    win = jnp.zeros((n, pi), jnp.bool_)
+    for o in range(pi):
+        req_o = out_req == o
+        score_o = jnp.where(req_o, p_score, INF)
+        m = jnp.min(score_o, axis=1, keepdims=True)
+        win_o = req_o & (score_o == m) & (m < INF)
+        first = jnp.cumsum(win_o.astype(jnp.int32), axis=1)
+        win_o &= first == 1
+        win |= win_o
+    win_mask = sel & eligible & win[:, :, None]
+    return win_mask, vc_choice, out_req

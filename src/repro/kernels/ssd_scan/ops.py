@@ -1,0 +1,13 @@
+"""Public wrapper for the SSD Pallas kernel."""
+import jax
+
+from .ssd_scan import ssd_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk: int = 128):
+    return ssd_scan_pallas(x, dt, a, b_mat, c_mat, chunk=chunk,
+                           interpret=_interpret())

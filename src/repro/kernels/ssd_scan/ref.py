@@ -1,0 +1,31 @@
+"""Oracle for the SSD kernel: the pure-jnp chunked core (itself validated
+against a naive per-token recurrence in tests/test_kernels.py)."""
+from repro.models.ssm import ssd_chunked_core  # noqa: F401
+
+
+def ssd_ref(x, dt, a, b_mat, c_mat, chunk):
+    return ssd_chunked_core(x, dt, a, b_mat, c_mat, chunk)
+
+
+def ssd_naive(x, dt, a, b_mat, c_mat):
+    """Per-token recurrence (the mathematical definition)."""
+    import jax.numpy as jnp
+    import jax
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt * a[None, :])                    # [B,H]
+        upd = jnp.einsum("bn,bhp,bh->bhnp", bt, xt, dtt)
+        s = s * da[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", ct, s)
+        return s, y
+
+    bsz, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b_mat.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c_mat.astype(jnp.float32), 1, 0))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s

@@ -1,0 +1,120 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid: (B, n_chunks) — the chunk axis is the minor grid dimension, which
+TPU executes sequentially, so the inter-chunk recurrent state lives in a
+VMEM scratch accumulator that persists across grid steps (reset at
+chunk 0, flushed to the final-state output at the last chunk).
+
+Per program: one chunk [Q, H, P] of inputs.  All within-chunk terms are
+expressed as matmuls (MXU): the inclusive cumulative sum of decay rates
+is a lower-triangular-ones matmul, the within-chunk "attention" term is
+(C Bᵀ ∘ L) X, and the chunk state summary is Bᵀ (decay·dt·X).
+
+VMEM at Q=128, H=64, P=64, N=128 (mamba2-1.3b): x/y tiles 2 MiB (f32),
+L matrix Q²H = 4 MiB — under the 16 MiB budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_out_ref,
+                state_ref, *, n_chunks: int):
+    ci = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)        # [Q, H, P]
+    dt = dt_ref[...].astype(jnp.float32)      # [Q, H]
+    a = a_ref[...].astype(jnp.float32)        # [H]
+    bm = b_ref[...].astype(jnp.float32)       # [Q, N]
+    cm = c_ref[...].astype(jnp.float32)       # [Q, N]
+    q, h, p = x.shape
+    n = bm.shape[-1]
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    da = dt * a[None, :]                                        # [Q, H]
+    tril = jnp.tril(jnp.ones((q, q), jnp.float32))
+    cum = jax.lax.dot_general(tril, da, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    seg = cum[:, None, :] - cum[None, :, :]                     # [Q,Q,H]
+    mask = jnp.tril(jnp.ones((q, q), jnp.bool_))
+    l_mat = jnp.where(mask[:, :, None], jnp.exp(seg), 0.0)
+
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q,Q]
+    xdt = x * dt[:, :, None]                                    # [Q,H,P]
+    m = (cb[:, :, None] * l_mat)                                # [Q,Q,H]
+    # y_diag[q,h,p] = sum_k m[q,k,h] xdt[k,h,p]  (batched over h)
+    mt = jnp.transpose(m, (2, 0, 1))                            # [H,Q,Q]
+    xt = jnp.transpose(xdt, (1, 0, 2))                          # [H,Q,P]
+    y_diag = jax.lax.dot_general(
+        mt, xt, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                     # [H,Q,P]
+    y_diag = jnp.transpose(y_diag, (1, 0, 2))                   # [Q,H,P]
+
+    # inter-chunk term from the carried state
+    s_in = state_ref[...].astype(jnp.float32)                   # [H,N,P]
+    s_flat = jnp.transpose(s_in, (1, 0, 2)).reshape(n, h * p)   # [N,HP]
+    y_int = jax.lax.dot_general(cm, s_flat, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_int = y_int.reshape(q, h, p) * jnp.exp(cum)[:, :, None]   # [Q,H,P]
+    y_ref[...] = (y_diag + y_int).astype(y_ref.dtype)
+
+    # state update: S = S * exp(cum[-1]) + B^T (exp(cum[-1]-cum)*dt*X)
+    decay_tail = jnp.exp(cum[-1:, :] - cum)                     # [Q,H]
+    w = x * (decay_tail * dt)[:, :, None]                       # [Q,H,P]
+    w2 = w.reshape(q, h * p)
+    s_new = jax.lax.dot_general(bm, w2, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    s_new = jnp.transpose(s_new.reshape(n, h, p), (1, 0, 2))    # [H,N,P]
+    chunk_decay = jnp.exp(cum[-1, :])                           # [H]
+    s_next = s_in * chunk_decay[:, None, None] + s_new
+    state_ref[...] = s_next
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        s_out_ref[...] = s_next.astype(s_out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, dt, a, b_mat, c_mat, *, chunk: int = 128,
+                    interpret: bool = False):
+    """x: [B,T,H,P]; dt: [B,T,H]; a: [H]; b/c: [B,T,N].
+
+    Returns (y [B,T,H,P], final_state [B,H,N,P] float32).
+    """
+    bsz, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    kern = functools.partial(_ssd_kernel, n_chunks=nc)
+    grid = (bsz, nc)
+    y, s = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, h, p), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((None, chunk, h), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((h,), lambda b, c: (0,)),
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, n), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, h, p), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((None, h, n, p), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, t, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((h, n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b_mat, c_mat)
+    return y, s

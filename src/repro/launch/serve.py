@@ -1,0 +1,73 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b \
+        --smoke --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import Model, unbox
+from repro.models.model import DecodeDims
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = Model(cfg)
+    params, _ = unbox(model.init(jax.random.PRNGKey(args.seed)))
+
+    rng = np.random.default_rng(args.seed)
+    b, t = args.batch, args.prompt_len
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (b, t)), jnp.int32)
+    batch = {"tokens": prompts}
+    if cfg.arch_kind == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, 0.02, (b, t, cfg.d_model)), jnp.float32)
+
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+    print(f"[serve] prefill {b}x{t}: {t_prefill*1e3:.0f}ms")
+
+    # Decode uses ring-buffer caches: generating past the prompt length
+    # overwrites the oldest prompt entries (sliding-window semantics for
+    # attention caches; SSM state is exact regardless).  For gen <=
+    # prompt_len this demo stays well inside the window.
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen):
+        logits, caches = decode(params, caches, tok, jnp.int32(t + i))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    toks = jnp.concatenate(out, axis=1)
+    print(f"[serve] decoded {args.gen} tokens/seq x {b} seqs in "
+          f"{dt*1e3:.0f}ms ({args.gen*b/max(dt,1e-9):.1f} tok/s)")
+    print("[serve] sample:", np.asarray(toks[0][:16]))
+    return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Step builders + input/parameter specs for training and serving.
+
+Everything here works on ShapeDtypeStructs as well as real arrays, so the
+multi-pod dry-run lowers the exact production step functions without
+allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import Model, ModelConfig, ParallelCtx, unbox
+from repro.models.model import DecodeDims
+from repro.models.sharding import tree_pspecs, batch_spec
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+
+
+def build_ctx(mesh: Mesh) -> ParallelCtx:
+    names = mesh.axis_names
+    batch_axes = tuple(n for n in names if n in ("pod", "data"))
+    return ParallelCtx(mesh=mesh, batch_axes=batch_axes,
+                       model_axis="model", fsdp_axes=("data",))
+
+
+# ---------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------
+
+def param_shapes_and_axes(model: Model):
+    boxed = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return unbox(boxed)           # (ShapeDtypeStruct tree, axes tree)
+
+
+def param_shardings(model: Model, ctx: ParallelCtx,
+                    serving_mode: str = "train"):
+    shapes, axes = param_shapes_and_axes(model)
+    if serving_mode == "decode":
+        # weight-stationary serving: no FSDP (embed unsharded over data);
+        # instead the *output* dims (mlp/d_ff) shard over "data", so
+        # per-layer weight all-gathers become tiny activation psums, and
+        # MoE experts match moe_ep_stationary's (model, data) layout.
+        ctx = dataclasses.replace(ctx,
+                                  extra_rules={"embed": (),
+                                               "mlp": ("data",)})
+    elif model.cfg.seq_parallel:
+        # sequence-parallel archs keep activations seq-sharded on the
+        # model axis end-to-end; tensor-parallel MLP sharding would force
+        # an all-gather/reduce-scatter pair at every layer boundary, so
+        # the (small) MLP weights are replicated over "model" instead
+        # and remain FSDP-sharded over "data".
+        ctx = dataclasses.replace(ctx, extra_rules={"mlp": ()})
+    specs = tree_pspecs(axes, shapes, ctx, for_weights=True)
+    shard = jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    return shapes, shard
+
+
+def batch_specs(cfg: ModelConfig, shape: dict, ctx: ParallelCtx | None):
+    b, t = shape["global_batch"], shape["seq_len"]
+    mode = shape["mode"]
+    sds = jax.ShapeDtypeStruct
+    if mode == "train":
+        batch = {"tokens": sds((b, t), jnp.int32),
+                 "labels": sds((b, t), jnp.int32)}
+        if cfg.arch_kind == "encdec":
+            batch["frames"] = sds((b, t, cfg.d_model), jnp.float32)
+    elif mode == "prefill":
+        batch = {"tokens": sds((b, t), jnp.int32)}
+        if cfg.arch_kind == "encdec":
+            batch["frames"] = sds((b, t, cfg.d_model), jnp.float32)
+    else:                          # decode
+        batch = {"tokens": sds((b, 1), jnp.int32)}
+    if ctx is None:
+        return batch, None
+    shard = {k: NamedSharding(ctx.mesh, batch_spec(ctx, b, v.ndim))
+             for k, v in batch.items()}
+    return batch, shard
+
+
+def cache_specs(model: Model, dims: DecodeDims, ctx: ParallelCtx | None):
+    shapes = jax.eval_shape(lambda: model.init_cache(dims))
+    if ctx is None:
+        return shapes, None
+    axes = model.cache_logical_axes(dims)
+    cfg = model.cfg
+    msize = ctx.mesh.shape[ctx.model_axis]
+    # prefer kv-head sharding; fall back to sequence sharding (distributed
+    # softmax) when the arch's kv head count cannot tile the model axis
+    if cfg.attn_kind == "gqa" and cfg.n_kv_heads % msize == 0:
+        extra = {"seq": (), "kv": (ctx.model_axis,)}
+    else:
+        extra = {"seq": (ctx.model_axis,), "kv": ()}
+    ctx2 = dataclasses.replace(ctx, extra_rules=extra)
+    specs = tree_pspecs(axes, shapes, ctx2, for_weights=False)
+    shard = jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    return shapes, shard
+
+
+# ---------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    total_steps: int = 10000
+    warmup_steps: int = 100
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With microbatches > 1, the batch is split along dim 0 and gradients
+    are accumulated in a lax.scan (activation memory / pipeline knob).
+    """
+    def loss_fn(p, b):
+        return model.loss_fn(p, b)
+
+    def train_step(params, opt_state, batch):
+        k = tcfg.microbatches
+        # Cast the fp32 masters to bf16 ONCE per step, before any use:
+        # the FSDP weight all-gathers the partitioner inserts then move
+        # bf16 (half the wire bytes) and are loop-invariant w.r.t. the
+        # microbatch scan.  Gradients flow to the bf16 copies and are
+        # accumulated in fp32 (standard mixed precision).
+        params_c = model._cast(params)
+        if k > 1:
+            def micro(carry, mb):
+                acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params_c, mb)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return acc, l
+            mbs = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(micro, zero, mbs)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params_c, batch)
+        lr_scale = warmup_cosine(opt_state.step + 1,
+                                 warmup=tcfg.warmup_steps,
+                                 total=tcfg.total_steps)
+        params, opt_state, gnorm = adamw_update(
+            tcfg.opt, params, grads, opt_state, lr_scale)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos)
+    return decode_step

@@ -1,0 +1,5 @@
+"""Model substrate: unified LM/enc-dec/SSM family for the 10 assigned
+architectures, with logical-axis sharding and scan-over-pattern stacks."""
+from .model import Model, ModelConfig, DecodeDims  # noqa
+from .layers import unbox, Boxed  # noqa
+from .sharding import ParallelCtx, tree_pspecs, tree_shardings, batch_spec  # noqa

@@ -1,0 +1,548 @@
+"""Model substrate layers: norm, rope, attention (GQA / MLA / sliding
+window), SwiGLU MLP, and MoE (ragged-dot reference + shard_map expert
+parallelism).
+
+Every `init_*` returns a tree of `Boxed(value, axes)` leaves; `unbox`
+splits it into the parameter tree and a parallel tree of *logical axis*
+tuples, which `repro.models.sharding` maps to mesh `PartitionSpec`s.
+Logical axis vocabulary:
+    "embed"  d_model        "mlp"     d_ff           "vocab"  vocabulary
+    "heads"  q heads        "kv"      kv heads       "qkv"    per-head dim
+    "experts" MoE experts   "layers"  stacked layers  None     replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Boxed:
+    v: Any
+    ax: tuple
+
+
+def isbox(x):
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    params = jax.tree.map(lambda b: b.v, tree, is_leaf=isbox)
+    axes = jax.tree.map(lambda b: b.ax, tree, is_leaf=isbox)
+    return params, axes
+
+
+def _norm(key, shape, scale=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------
+
+def init_rmsnorm(d, dtype=jnp.float32):
+    return {"w": Boxed(jnp.ones((d,), dtype), ("embed",))}
+
+
+def rms_norm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["w"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------
+
+def rope(x, positions, theta=1e4):
+    """x: [..., T, H, hd]; positions: [..., T] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # ang: [..., T, 1, half]
+    ang = positions[..., :, None, None].astype(jnp.float32) * \
+        freqs[None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / sliding window; decode cache)
+# ---------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": Boxed(_norm(ks[0], (d, h, hd), dtype=dtype),
+                    ("embed", "heads", "qkv")),
+        "wk": Boxed(_norm(ks[1], (d, kv, hd), dtype=dtype),
+                    ("embed", "kv", "qkv")),
+        "wv": Boxed(_norm(ks[2], (d, kv, hd), dtype=dtype),
+                    ("embed", "kv", "qkv")),
+        "wo": Boxed(_norm(ks[3], (h, hd, d), dtype=dtype),
+                    ("heads", "qkv", "embed")),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = Boxed(jnp.ones((hd,), dtype), (None,))
+        p["knorm"] = Boxed(jnp.ones((hd,), dtype), (None,))
+    return p
+
+
+def _head_rms(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (xf * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def _sdpa(q, k, v, mask, use_flash=False, window=None, causal=True,
+          grouped=False):
+    """q: [B,Tq,H,hd] k,v: [B,Tk,KV,hd].
+
+    Default (head-sharded mode): KV heads are repeated to the full head
+    count *at use* so the scores tensor keeps the q-heads sharding (a
+    [b,kv,g,q,s] layout forces GSPMD to gather heads whenever KV doesn't
+    tile the model axis).  The KV cache itself stays kv-sized.
+
+    grouped=True (sequence-parallel mode — heads replicated, q-seq
+    sharded): the grouped einsum is used instead, avoiding the g-fold KV
+    inflation since head sharding is not needed.
+
+    When `use_flash` is set and shapes allow, dispatches to the Pallas
+    flash-attention kernel.
+    """
+    b, tq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    if use_flash and tq > 1 and tq % 128 == 0 and k.shape[1] % 128 == 0:
+        from repro.kernels.flash_attention import ops as fops
+        return fops.flash_attention(q, k, v, causal=causal, window=window)
+    if grouped and g > 1:
+        qg = q.reshape(b, tq, kvh, g, hd)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                            preferred_element_type=jnp.float32)
+        scores = scores / np.sqrt(hd)
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+        return out.reshape(b, tq, h, hd)
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(hd)
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, v)
+    return out
+
+
+def attention(params, x, cfg, *, positions, cache=None, cache_pos=None,
+              window=None, cross_kv=None, causal=True, use_flash=False,
+              build_cache=False, ctx=None):
+    """Returns (out [B,T,D], new_cache).
+
+    * training: cache=None, full sequence.
+    * prefill: build_cache=True — returns the rope'd (k, v) (clipped to
+      the sliding window for local layers) as the decode cache.
+    * decode: x is [B,1,D]; cache = (k,v) with [B,S,KV,hd]; the new token
+      attends to the S cached entries plus itself and is written into the
+      cache ring at `cache_pos % S`.
+    * cross attention: cross_kv = (k, v) precomputed from the encoder.
+    """
+    b, t, d = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    if cross_kv is None:
+        k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+        v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    else:
+        k, v = cross_kv
+    if cfg.qk_norm:
+        q = _head_rms(q, params["qnorm"])
+        if cross_kv is None:
+            k = _head_rms(k, params["knorm"])
+    if cross_kv is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if build_cache:
+        w = window or k.shape[1]
+        new_cache = (k[:, -w:], v[:, -w:])
+    if cache is not None and ctx is not None and t == 1 \
+            and cross_kv is None:
+        msize = ctx.mesh.shape[ctx.model_axis]
+        if (cache[0].shape[1] % msize == 0 and
+                cfg.n_kv_heads % msize != 0):
+            # seq-sharded cache + non-tiling kv heads: distributed
+            # decode attention (cache stays put, stats are psummed)
+            out, new_cache = decode_attention_dist(
+                params, q, k, v, cache, cache_pos, cfg, ctx)
+            out = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+            return out, new_cache
+    if cache is not None:
+        ck, cv = cache
+        s = ck.shape[1]
+        # append the fresh token at cache_pos (static-shape ring update)
+        cache_pos = cache_pos % s
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 cache_pos, axis=1)
+        new_cache = (ck, cv)
+        k, v = ck, cv
+        # decode: every cache slot is valid — local layers pass a cache
+        # pre-sized to their window, so no extra masking is needed
+        mask = jnp.ones((1, t, s), bool)
+    else:
+        tk = k.shape[1]
+        # positions are identical across the batch in train/prefill; keep
+        # the mask batch-free so it never materializes at global batch
+        qpos = positions[:1, :, None]
+        if cross_kv is None:
+            kpos = positions[:1, None, :]
+        else:
+            kpos = jnp.arange(tk)[None, None, :]
+        if causal:
+            mask = qpos >= kpos
+            if window is not None:
+                mask = mask & (qpos - kpos < window)
+        else:
+            mask = jnp.ones((1, t, tk), bool)
+
+    out = _sdpa(q, k, v, mask, use_flash=use_flash, window=window,
+                causal=causal and cross_kv is None and cache is None,
+                grouped=cfg.seq_parallel)
+    out = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return out, new_cache
+
+
+def decode_attention_dist(params, q, k_new, v_new, cache, pos, cfg, ctx,
+                          qk_norm_done=True):
+    """Distributed decode attention over a sequence-sharded KV cache.
+
+    When kv-heads don't tile the model axis, GSPMD's default for the
+    seq-sharded cache is an all-gather of K and V *per layer per token*
+    (GiBs/step).  This shard_map keeps the cache stationary: each model
+    shard scores its local cache slice, and only the online-softmax
+    statistics (max, denominator) and the [B,1,H,hd] output are psummed.
+    The fresh token's k/v is written by the shard that owns the ring slot.
+
+    q: [B,1,H,hd]; k_new/v_new: [B,1,KV,hd]; cache=(ck,cv) [B,S,KV,hd].
+    """
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from .sharding import batch_spec
+
+    mesh, maxis = ctx.mesh, ctx.model_axis
+    b = q.shape[0]
+    bspec = batch_spec(ctx, b, 4)
+    bd = bspec[0]
+    cache_spec = P(bd, maxis, None, None)
+    hd = q.shape[-1]
+
+    def body(q, kn, vn, ck, cv, pos):
+        i = jax.lax.axis_index(maxis)
+        s_loc = ck.shape[1]
+        loc = (pos % (s_loc * mesh.shape[maxis]))
+        owner = loc // s_loc
+        upd_k = jax.lax.dynamic_update_slice_in_dim(
+            ck, kn.astype(ck.dtype), loc % s_loc, axis=1)
+        upd_v = jax.lax.dynamic_update_slice_in_dim(
+            cv, vn.astype(cv.dtype), loc % s_loc, axis=1)
+        ck = jnp.where(i == owner, upd_k, ck)
+        cv = jnp.where(i == owner, upd_v, cv)
+        bq, _, h, _ = q.shape
+        kvh = ck.shape[2]
+        g = h // kvh
+        qg = q.reshape(bq, 1, kvh, g, hd)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck,
+                       preferred_element_type=jnp.float32) / np.sqrt(hd)
+        m_loc = s.max(axis=-1, keepdims=True)
+        m = jax.lax.pmax(m_loc, maxis)
+        p = jnp.exp(s - m)
+        denom = jax.lax.psum(p.sum(axis=-1, keepdims=True), maxis)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(q.dtype), cv)
+        o = jax.lax.psum(o.astype(jnp.float32), maxis)
+        d = denom[:, :, :, 0, 0]                    # [b, kv, g]
+        o = (o / d[:, None, :, :, None]).astype(q.dtype)
+        return o.reshape(bq, 1, h, hd), ck, cv
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(batch_spec(ctx, b, 4), batch_spec(ctx, b, 4),
+                  batch_spec(ctx, b, 4), cache_spec, cache_spec, P()),
+        out_specs=(batch_spec(ctx, b, 4), cache_spec, cache_spec),
+        check_rep=False)
+    out, ck, cv = fn(q, k_new, v_new, cache[0], cache[1],
+                     jnp.asarray(pos, jnp.int32))
+    return out, (ck, cv)
+
+
+# ---------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek style)
+# ---------------------------------------------------------------------
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr = cfg.mla_nope_dim, cfg.mla_rope_dim
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 7)
+    return {
+        "wdq": Boxed(_norm(ks[0], (d, qr), dtype=dtype), ("embed", None)),
+        "wuq": Boxed(_norm(ks[1], (qr, h, dn + dr), dtype=dtype),
+                     (None, "heads", "qkv")),
+        "wdkv": Boxed(_norm(ks[2], (d, kvr), dtype=dtype), ("embed", None)),
+        "wukv": Boxed(_norm(ks[3], (kvr, h, dn + dn), dtype=dtype),
+                      (None, "heads", "qkv")),
+        "wkr": Boxed(_norm(ks[4], (d, dr), dtype=dtype), ("embed", None)),
+        "wo": Boxed(_norm(ks[5], (h, dn, d), dtype=dtype),
+                    ("heads", "qkv", "embed")),
+        "qnorm": Boxed(jnp.ones((qr,), dtype), (None,)),
+        "kvnorm": Boxed(jnp.ones((kvr,), dtype), (None,)),
+    }
+
+
+def mla_attention(params, x, cfg, *, positions, cache=None, cache_pos=None,
+                  build_cache=False):
+    """MLA with the compressed-KV cache (c_kv + shared k_rope).
+
+    cache = (c_kv [B,S,kvr], k_rope [B,S,dr]) — this is MLA's memory win.
+    """
+    b, t, d = x.shape
+    h, dn, dr = cfg.n_heads, cfg.mla_nope_dim, cfg.mla_rope_dim
+
+    cq = _head_rms(jnp.einsum("btd,dr->btr", x, params["wdq"]),
+                   params["qnorm"])
+    q = jnp.einsum("btr,rhk->bthk", cq, params["wuq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = _head_rms(jnp.einsum("btd,dr->btr", x, params["wdkv"]),
+                    params["kvnorm"])
+    krope = rope(jnp.einsum("btd,dr->btr", x, params["wkr"])[:, :, None, :],
+                 positions, cfg.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    if build_cache:
+        new_cache = (ckv, krope)
+    if cache is not None:
+        c_ckv, c_kr = cache
+        cache_pos = cache_pos % c_ckv.shape[1]
+        c_ckv = jax.lax.dynamic_update_slice_in_dim(
+            c_ckv, ckv.astype(c_ckv.dtype), cache_pos, axis=1)
+        c_kr = jax.lax.dynamic_update_slice_in_dim(
+            c_kr, krope.astype(c_kr.dtype), cache_pos, axis=1)
+        new_cache = (c_ckv, c_kr)
+        ckv, krope = c_ckv, c_kr
+
+    kv = jnp.einsum("bsr,rhk->bshk", ckv, params["wukv"])
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+
+    s = ckv.shape[1]
+    scores = (jnp.einsum("bthk,bshk->bhts", q_nope, k_nope,
+                         preferred_element_type=jnp.float32) +
+              jnp.einsum("bthk,bsk->bhts", q_rope, krope,
+                         preferred_element_type=jnp.float32))
+    scores = scores / np.sqrt(dn + dr)
+    if cache is None:
+        mask = positions[:1, None, :, None] >= positions[:1, None, None, :]
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, -1).astype(x.dtype)
+    out = jnp.einsum("bhts,bshk->bthk", w, v)
+    out = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------
+
+def init_mlp(key, d, f, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": Boxed(_norm(ks[0], (d, f), dtype=dtype), ("embed", "mlp")),
+        "wg": Boxed(_norm(ks[1], (d, f), dtype=dtype), ("embed", "mlp")),
+        "wo": Boxed(_norm(ks[2], (f, d), dtype=dtype), ("mlp", "embed")),
+    }
+
+
+def mlp(params, x):
+    h = jnp.einsum("btd,df->btf", x, params["wi"])
+    g = jnp.einsum("btd,df->btf", x, params["wg"])
+    return jnp.einsum("btf,fd->btd", jax.nn.silu(g) * h, params["wo"])
+
+
+# ---------------------------------------------------------------------
+# MoE: top-k routing.
+#   * reference path: sort + jax.lax.ragged_dot (exact, dropless)
+#   * distributed path: shard_map expert parallelism over the "model"
+#     axis with capacity-based selection and a psum combine.
+# ---------------------------------------------------------------------
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": Boxed(_norm(ks[0], (d, e)), ("embed", None)),
+        "wi": Boxed(_norm(ks[1], (e, d, f), dtype=dtype),
+                    ("experts", "embed", "mlp")),
+        "wg": Boxed(_norm(ks[2], (e, d, f), dtype=dtype),
+                    ("experts", "embed", "mlp")),
+        "wo": Boxed(_norm(ks[3], (e, f, d), dtype=dtype),
+                    ("experts", "mlp", "embed")),
+    }
+
+
+def _router(params, x, cfg):
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros_like(me).at[top_e.reshape(-1)].add(
+        1.0 / top_e.size)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return top_p, top_e, aux
+
+
+def moe_ragged(params, x, cfg):
+    """Dropless reference using jax.lax.ragged_dot (single-shard oracle)."""
+    b, t, d = x.shape
+    k, e = cfg.top_k, cfg.n_experts
+    top_p, top_e, aux = _router(params, x, cfg)
+    xt = x.reshape(b * t, d)
+    flat_e = top_e.reshape(-1)                       # [b*t*k]
+    order = jnp.argsort(flat_e)
+    xr = jnp.repeat(xt, k, axis=0)[order]            # [b*t*k, d]
+    group_sizes = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+    h = jax.lax.ragged_dot(xr, params["wi"], group_sizes)
+    g = jax.lax.ragged_dot(xr, params["wg"], group_sizes)
+    y = jax.lax.ragged_dot((jax.nn.silu(g) * h).astype(x.dtype),
+                           params["wo"], group_sizes)
+    # unsort, weight, combine
+    inv = jnp.argsort(order)
+    y = y[inv].reshape(b * t, k, d)
+    y = (y * top_p.reshape(b * t, k, 1).astype(y.dtype)).sum(1)
+    return y.reshape(b, t, d), aux
+
+
+def moe_ep_local(params, x, cfg, axis_name, e_par, f_par):
+    """Body run inside shard_map over the `model` axis.
+
+    Each shard owns E_virt/e_par *virtual* experts (an expert split
+    `moe_virtual_split` ways along d_ff when E < mesh model size); the
+    psum over the model axis combines both the expert contributions and
+    the d_ff partials.  params arrive pre-sliced by shard_map.
+    """
+    b, t, d = x.shape
+    k = cfg.top_k
+    s = cfg.moe_virtual_split
+    e_loc = params["wi"].shape[0]
+    cap = int(min(b * t, max(1, round(b * t * k * cfg.capacity_factor /
+                                      cfg.n_experts))))
+
+    top_p, top_e, aux = _router(params, x, cfg)       # router is replicated
+    idx = jax.lax.axis_index(axis_name)
+    my_e0 = (idx // f_par) * e_loc
+
+    xt = x.reshape(b * t, d)
+    pe = top_e.reshape(b * t, k)
+    pp = top_p.reshape(b * t, k)
+    outs = jnp.zeros((b * t, d), jnp.float32)
+    for le in range(e_loc):
+        eid = (my_e0 + le) // s                       # real expert id
+        w = jnp.where(pe == eid, pp, 0.0).sum(-1)     # [b*t] gate weight
+        score = jnp.where(w > 0, w, -1.0)
+        _, sel = jax.lax.top_k(score, cap)            # token ids for expert
+        gate = w[sel]                                 # [cap]
+        xe = xt[sel]                                  # [cap, d]
+        h = jnp.einsum("cd,df->cf", xe, params["wi"][le])
+        g = jnp.einsum("cd,df->cf", xe, params["wg"][le])
+        ye = jnp.einsum("cf,fd->cd", (jax.nn.silu(g) * h).astype(x.dtype),
+                        params["wo"][le])
+        outs = outs.at[sel].add(ye.astype(jnp.float32) * gate[:, None])
+    outs = jax.lax.psum(outs, axis_name)
+    # aux is computed from the replicated router => identical on all shards
+    return outs.reshape(b, t, d).astype(x.dtype), aux
+
+
+def moe_ep_stationary(params, x, cfg, ctx):
+    """Weight-stationary MoE for serving (few tokens, huge experts).
+
+    Experts shard over the model axis AND their d_ff over the data axis;
+    the (tiny) token activations are all-gathered over "data", every
+    shard computes its (expert, d_ff-slice) contribution, and a psum over
+    "model" + psum_scatter over "data" reassembles the batch-sharded
+    output.  Wire bytes per layer: O(tokens x d_model) instead of
+    O(expert weights) — the decode fix for grok/qwen3-moe.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from .sharding import batch_spec
+
+    mesh, maxis, daxis = ctx.mesh, ctx.model_axis, "data"
+    b, t, d = x.shape
+    bspec = batch_spec(ctx, b, 3)
+    batch_on_data = bspec[0] is not None and (
+        daxis == bspec[0] or (isinstance(bspec[0], tuple) and
+                              daxis in bspec[0]))
+    k, s = cfg.top_k, cfg.moe_virtual_split
+    dsize = mesh.shape[daxis]
+
+    def body(params, xl):
+        if batch_on_data:
+            xg = jax.lax.all_gather(xl, daxis, axis=0, tiled=True)
+        else:
+            xg = xl
+        bg = xg.shape[0]
+        cap = int(min(bg * t, max(1, round(bg * t * k *
+                                           cfg.capacity_factor /
+                                           cfg.n_experts))))
+        top_p, top_e, aux = _router(params, xg, cfg)
+        idx = jax.lax.axis_index(maxis)
+        e_loc = params["wi"].shape[0]
+        my_e0 = idx * e_loc
+        xt = xg.reshape(bg * t, d)
+        pe = top_e.reshape(bg * t, k)
+        pp = top_p.reshape(bg * t, k)
+        outs = jnp.zeros((bg * t, d), jnp.float32)
+        for le in range(e_loc):
+            eid = (my_e0 + le) // s
+            w = jnp.where(pe == eid, pp, 0.0).sum(-1)
+            score = jnp.where(w > 0, w, -1.0)
+            _, sel = jax.lax.top_k(score, cap)
+            gate = w[sel]
+            xe = xt[sel]
+            h = jnp.einsum("cd,df->cf", xe, params["wi"][le])
+            g = jnp.einsum("cd,df->cf", xe, params["wg"][le])
+            ye = jnp.einsum("cf,fd->cd",
+                            (jax.nn.silu(g) * h).astype(x.dtype),
+                            params["wo"][le])
+            outs = outs.at[sel].add(ye.astype(jnp.float32) * gate[:, None])
+        outs = jax.lax.psum(outs, maxis)
+        if batch_on_data:
+            outs = jax.lax.psum_scatter(outs, daxis, scatter_dimension=0,
+                                        tiled=True)
+        else:
+            outs = jax.lax.psum(outs, daxis)
+        bl = xl.shape[0]
+        return outs.reshape(bl, t, d).astype(x.dtype), aux
+
+    pspec = {"router": P(), "wi": P(maxis, None, daxis),
+             "wg": P(maxis, None, daxis), "wo": P(maxis, daxis, None)}
+    fn = shard_map(body, mesh=mesh, in_specs=(pspec, bspec),
+                   out_specs=(bspec, P()), check_rep=False)
+    return fn(params, x)

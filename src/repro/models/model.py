@@ -1,0 +1,616 @@
+"""Unified model family covering all 10 assigned architectures.
+
+One configurable decoder/enc-dec stack expresses:
+  GQA (+qk-norm, sliding-window local:global), MLA, MoE (ragged reference
+  or shard_map expert parallelism), Mamba2/SSD and attn:SSM hybrids, and
+  an encoder-decoder wrapper with a stubbed modality frontend.
+
+The layer list is grouped into a repeating *pattern* (e.g. gemma3 = 5
+local + 1 global, jamba = 7 mamba + 1 attn with MoE on odd slots) so the
+whole stack is a `lax.scan` over pattern repetitions with stacked weights
+— this keeps HLO size and compile time bounded for the 40-cell dry-run.
+Remainder layers ("tail") are applied unrolled.
+
+Steps exposed per architecture (see launch/dryrun.py):
+  * train:   tokens -> xent loss (+ MoE aux), grads, AdamW update
+  * prefill: tokens -> logits + KV/SSM caches
+  * decode:  one token against a seq_len cache (serve_step)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import ssm as S
+from .layers import Boxed, unbox, isbox
+
+# register Boxed as a pytree so vmap/scan can stack boxed params
+jax.tree_util.register_pytree_node(
+    Boxed, lambda b: ((b.v,), b.ax), lambda ax, ch: Boxed(ch[0], ax))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    # attention
+    attn_kind: str = "gqa"             # gqa | mla | none
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    window: int = 0                    # sliding window (local layers)
+    global_every: int = 0              # k>0: every k-th layer is global
+    # MLA
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    mla_nope_dim: int = 0
+    mla_rope_dim: int = 0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1                 # 1: all layers; 2: odd layers
+    capacity_factor: float = 1.25
+    moe_virtual_split: int = 1         # split each expert's d_ff s ways
+    # SSM
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    attn_every: int = 0                # k>0: attention at i%k==k//2
+    # structure
+    arch_kind: str = "decoder"         # decoder | encdec
+    n_enc_layers: int = 0
+    frontend: str = "none"             # none | audio_frames
+    # numerics / perf
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "full"                # full | dots | none
+    use_flash_kernel: bool = False
+    use_ssd_kernel: bool = False
+    scan_unroll: int = 1               # dry-run cost extrapolation knob
+    seq_parallel: bool = False         # set by Model when heads don't
+                                       # tile the model axis (see __init__)
+
+    @property
+    def hd(self):
+        return self.head_dim or self.d_model // self.n_heads
+
+    # ---- layer pattern --------------------------------------------------
+    def layer_specs(self):
+        specs = []
+        for i in range(self.n_layers):
+            if self.attn_kind == "none":
+                kind = "mamba"
+            elif self.attn_every:
+                kind = ("attn" if i % self.attn_every == self.attn_every // 2
+                        else "mamba")
+            else:
+                kind = "mla" if self.attn_kind == "mla" else "attn"
+            window = 0
+            if kind == "attn" and self.global_every:
+                if i % self.global_every != self.global_every - 1:
+                    window = self.window
+            moe = bool(self.n_experts) and (
+                i % self.moe_every == self.moe_every - 1)
+            has_mlp = self.d_ff > 0 and kind != "mamba" or \
+                (kind == "mamba" and self.attn_every > 0 and self.d_ff > 0)
+            specs.append(dict(kind=kind, window=window, moe=moe,
+                              mlp=has_mlp and not moe))
+        return specs
+
+    def pattern(self):
+        """(pattern slots, n_rep, tail slots)."""
+        specs = self.layer_specs()
+        p = 1
+        for k in (self.global_every, self.attn_every,
+                  self.moe_every if self.n_experts else 1):
+            if k:
+                p = p * k // math.gcd(p, k)
+        p = min(p, self.n_layers)
+        n_rep = self.n_layers // p
+        tail = specs[n_rep * p:]
+        # verify periodicity
+        for i in range(n_rep * p):
+            assert specs[i] == specs[i % p], (i, specs[i], specs[i % p])
+        return specs[:p], n_rep, tail
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeDims:
+    """Cache geometry for serve steps."""
+    batch: int
+    seq: int          # cache length (== shape's seq_len)
+
+
+# =====================================================================
+# single layer
+# =====================================================================
+
+def init_layer(key, spec, cfg: ModelConfig, cross: bool = False):
+    ks = jax.random.split(key, 5)
+    dt = cfg.param_dtype
+    p = {"ln1": L.init_rmsnorm(cfg.d_model, dt)}
+    if spec["kind"] == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg, dt)
+    elif spec["kind"] == "mla":
+        p["attn"] = L.init_mla(ks[0], cfg, dt)
+    else:
+        p["ssm"] = S.init_mamba2(ks[0], cfg, dt)
+    if cross:
+        p["ln_x"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["xattn"] = L.init_attention(ks[2], cfg, dt)
+    if spec["moe"]:
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["moe"] = L.init_moe(ks[1], cfg, dt)
+        if cfg.moe_virtual_split > 1:
+            s = cfg.moe_virtual_split
+            for nm in ("wi", "wg", "wo"):
+                b = p["moe"][nm]
+                e = b.v.shape[0]
+                if nm == "wo":      # [E, F, D] split F
+                    v = b.v.reshape(e, s, b.v.shape[1] // s, b.v.shape[2])
+                    v = v.reshape(e * s, b.v.shape[1] // s, b.v.shape[2])
+                else:               # [E, D, F] split F
+                    v = b.v.reshape(e, b.v.shape[1], s, b.v.shape[2] // s)
+                    v = jnp.moveaxis(v, 2, 1).reshape(
+                        e * s, b.v.shape[1], b.v.shape[2] // s)
+                p["moe"][nm] = Boxed(v, b.ax)
+    elif spec["mlp"]:
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def make_moe_apply(cfg: ModelConfig, ctx):
+    """Return fn(params, x) -> (y, aux) choosing ragged vs shard_map EP."""
+    if ctx is None:
+        def ragged(params, x):
+            if cfg.moe_virtual_split > 1:
+                s = cfg.moe_virtual_split
+                e = cfg.n_experts
+                pm = dict(params)
+                wi, wg, wo = params["wi"], params["wg"], params["wo"]
+                f = wi.shape[2] * s
+                pm["wi"] = jnp.moveaxis(
+                    wi.reshape(e, s, wi.shape[1], wi.shape[2]), 1, 2
+                ).reshape(e, wi.shape[1], f)
+                pm["wg"] = jnp.moveaxis(
+                    wg.reshape(e, s, wg.shape[1], wg.shape[2]), 1, 2
+                ).reshape(e, wg.shape[1], f)
+                pm["wo"] = wo.reshape(e, f, wo.shape[2])
+                return L.moe_ragged(pm, x, cfg)
+            return L.moe_ragged(params, x, cfg)
+        return ragged
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = ctx.mesh
+    maxis = ctx.model_axis
+    m = mesh.shape[maxis]
+    e_virt = cfg.n_experts * cfg.moe_virtual_split
+    assert e_virt % m == 0, (cfg.name, e_virt, m)
+
+    def apply(params, x):
+        b, t, _ = x.shape
+        if b * t <= 2048:
+            # serving / few tokens: weight-stationary expert parallelism
+            return L.moe_ep_stationary(params, x, cfg, ctx)
+        from .sharding import batch_spec
+        bspec = batch_spec(ctx, b, 3)
+        pspec = {
+            "router": P(),
+            "wi": P(maxis), "wg": P(maxis), "wo": P(maxis),
+        }
+        fn = shard_map(
+            partial(L.moe_ep_local, cfg=cfg, axis_name=maxis,
+                    e_par=m, f_par=1),
+            mesh=mesh,
+            in_specs=(pspec, bspec),
+            out_specs=(bspec, P()),
+            check_rep=False)
+        return fn(params, x)
+    return apply
+
+
+def apply_layer(spec, p, x, cfg: ModelConfig, *, positions, cache,
+                cache_pos, enc_out, moe_apply, cross: bool = False,
+                build: bool = False, attn_ctx=None):
+    new_cache = []
+    h = L.rms_norm(p["ln1"], x)
+    if spec["kind"] in ("attn", "mla"):
+        c_self = cache[0] if cache is not None else None
+        if spec["kind"] == "attn":
+            out, nc = L.attention(
+                p["attn"], h, cfg, positions=positions, cache=c_self,
+                cache_pos=cache_pos,
+                window=spec["window"] or None,
+                use_flash=cfg.use_flash_kernel, build_cache=build,
+                ctx=attn_ctx)
+        else:
+            out, nc = L.mla_attention(p["attn"], h, cfg,
+                                      positions=positions, cache=c_self,
+                                      cache_pos=cache_pos,
+                                      build_cache=build)
+        new_cache.append(nc)
+    else:
+        st = cache[0] if cache is not None else None
+        cc = cache[1] if (cache is not None and len(cache) > 1) else None
+        out, (ns, ncc) = S.mamba2_block(
+            p["ssm"], h, cfg, state=st, conv_cache=cc,
+            use_kernel=cfg.use_ssd_kernel, build_cache=build)
+        new_cache.append(ns)
+        if ncc is not None:
+            new_cache.append(ncc)
+    x = x + out
+
+    if cross:
+        hx = L.rms_norm(p["ln_x"], x)
+        # enc_out: either raw encoder states (prefill/train) or
+        # precomputed (k, v) cross cache (decode)
+        if isinstance(enc_out, tuple):
+            xk, xv = enc_out
+        else:
+            xk = jnp.einsum("btd,dhk->bthk", enc_out, p["xattn"]["wk"])
+            xv = jnp.einsum("btd,dhk->bthk", enc_out, p["xattn"]["wv"])
+        out, _ = L.attention(p["xattn"], hx, cfg, positions=positions,
+                             cross_kv=(xk, xv), causal=False)
+        x = x + out
+
+    aux = jnp.zeros((), jnp.float32)
+    if spec["moe"]:
+        h2 = L.rms_norm(p["ln2"], x)
+        out2, aux = moe_apply(p["moe"], h2)
+        x = x + out2
+    elif spec["mlp"]:
+        h2 = L.rms_norm(p["ln2"], x)
+        x = x + L.mlp(p["mlp"], h2)
+    return x, (tuple(new_cache) if new_cache else None), aux
+
+
+# =====================================================================
+# full model
+# =====================================================================
+
+class Model:
+    def __init__(self, cfg: ModelConfig, ctx=None):
+        # Sequence parallelism: when the q-head count does not tile the
+        # model axis (gemma3: 4, starcoder2: 24, minicpm3: 40 vs 16),
+        # plain head sharding fails and GSPMD replicates the [B,H,T,T]
+        # score tensor per chip.  Sharding the *sequence* across the
+        # model axis instead keeps attention distributed (scores carry
+        # the q-dim sharding; k/v are all-gathered — tiny by comparison).
+        if ctx is not None and cfg.attn_kind in ("gqa", "mla") and \
+                cfg.attn_every == 0 and \
+                cfg.n_heads % ctx.mesh.shape[ctx.model_axis] != 0:
+            cfg = dataclasses.replace(cfg, seq_parallel=True)
+        self.cfg = cfg
+        self.ctx = ctx            # ParallelCtx or None
+
+    # ---- init -----------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        pat, n_rep, tail = cfg.pattern()
+        keys = jax.random.split(key, 8)
+        params: dict = {}
+        params["embed"] = Boxed(
+            L._norm(keys[0], (cfg.vocab, cfg.d_model),
+                    dtype=cfg.param_dtype), ("vocab", "embed"))
+        params["final_norm"] = L.init_rmsnorm(cfg.d_model, cfg.param_dtype)
+
+        def stack_slot(k, spec, cross=False):
+            ks = jax.random.split(k, n_rep)
+            return jax.vmap(lambda kk: init_layer(kk, spec, cfg,
+                                                  cross=cross))(ks)
+
+        blk_keys = jax.random.split(keys[1], len(pat))
+        cross = cfg.arch_kind == "encdec"
+        params["blocks"] = [
+            _prepend_axis(stack_slot(blk_keys[s], pat[s], cross=cross))
+            for s in range(len(pat))]
+        tail_keys = jax.random.split(keys[2], max(len(tail), 1))
+        params["tail"] = [init_layer(tail_keys[i], tail[i], cfg, cross=cross)
+                          for i in range(len(tail))]
+
+        if cfg.arch_kind == "encdec":
+            ks_e = jax.random.split(keys[3], cfg.n_enc_layers)
+            enc_spec = dict(kind="attn", window=0, moe=False, mlp=True)
+            params["enc_blocks"] = _prepend_axis(jax.vmap(
+                lambda kk: init_layer(kk, enc_spec, cfg))(ks_e))
+            params["enc_norm"] = L.init_rmsnorm(cfg.d_model,
+                                                cfg.param_dtype)
+        return params
+
+    # ---- shared stacks ----------------------------------------------------
+    def _run_blocks(self, params, x, *, positions, caches, cache_pos,
+                    enc_out, collect_cache, build=False):
+        cfg = self.cfg
+        pat, n_rep, tail = cfg.pattern()
+        moe_apply = make_moe_apply(cfg, self.ctx)
+        cross = cfg.arch_kind == "encdec"
+
+        def block_fn(carry, xs):
+            x, aux = carry
+            slot_params, slot_caches, slot_enc = xs
+            new_caches = []
+            for s, spec in enumerate(pat):
+                c = slot_caches[s] if slot_caches is not None else None
+                e = slot_enc[s] if slot_enc is not None else enc_out
+                x, nc, a = apply_layer(
+                    spec, slot_params[s], x, cfg, positions=positions,
+                    cache=c, cache_pos=cache_pos, enc_out=e,
+                    moe_apply=moe_apply, cross=cross, build=build,
+                    attn_ctx=self.ctx)
+                new_caches.append(nc)
+                aux = aux + a
+            out_c = tuple(new_caches) if collect_cache else None
+            return (x, aux), out_c
+
+        if cfg.remat == "full":
+            block = jax.checkpoint(block_fn,
+                                   policy=jax.checkpoint_policies.
+                                   nothing_saveable)
+        elif cfg.remat == "dots":
+            block = jax.checkpoint(
+                block_fn, policy=jax.checkpoint_policies.
+                checkpoint_dots_with_no_batch_dims)
+        else:
+            block = block_fn
+
+        blk_caches = caches["blocks"] if caches is not None else None
+        blk_enc = caches.get("cross_blocks") if (
+            caches is not None and cross) else None
+        (x, aux), blk_new = jax.lax.scan(
+            block, (x, jnp.zeros((), jnp.float32)),
+            (params["blocks"], blk_caches, blk_enc),
+            unroll=cfg.scan_unroll)
+
+        tail_new = []
+        for i, spec in enumerate(tail):
+            c = caches["tail"][i] if caches is not None else None
+            e = (caches["cross_tail"][i]
+                 if caches is not None and cross else enc_out)
+            x, nc, a = apply_layer(
+                spec, params["tail"][i], x, cfg, positions=positions,
+                cache=c, cache_pos=cache_pos, enc_out=e,
+                moe_apply=moe_apply, cross=cross, build=build,
+                attn_ctx=self.ctx)
+            tail_new.append(nc)
+            aux = aux + a
+        new_caches = (dict(blocks=blk_new, tail=tuple(tail_new))
+                      if collect_cache else None)
+        return x, aux, new_caches
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        x = self._bshard(frames.astype(cfg.compute_dtype))
+        b, t, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        enc_spec = dict(kind="attn", window=0, moe=False, mlp=True)
+
+        def enc_fn(x, slot_params):
+            h = L.rms_norm(slot_params["ln1"], x)
+            out, _ = L.attention(slot_params["attn"], h, cfg,
+                                 positions=positions, causal=False)
+            x = x + out
+            h2 = L.rms_norm(slot_params["ln2"], x)
+            return x + L.mlp(slot_params["mlp"], h2), None
+
+        x, _ = jax.lax.scan(lambda c, p: enc_fn(c, p), x,
+                            params["enc_blocks"], unroll=cfg.scan_unroll)
+        return L.rms_norm(params["enc_norm"], x)
+
+    # ---- entry points -----------------------------------------------------
+    def _bshard(self, x):
+        """Pin the batch (and, in sequence-parallel mode, the seq)
+        sharding of an activation (GSPMD propagation can otherwise
+        replicate the batch when the embedding's FSDP axis collides with
+        the batch axis on the same mesh dim)."""
+        if self.ctx is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from .sharding import batch_spec
+        spec = batch_spec(self.ctx, x.shape[0], x.ndim)
+        if (self.cfg.seq_parallel and x.ndim == 3 and
+                x.shape[1] % self.ctx.mesh.shape[self.ctx.model_axis]
+                == 0):
+            spec = P(spec[0], self.ctx.model_axis, None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.ctx.mesh, spec))
+
+    def _logits_shard(self, logits):
+        """Batch + vocab(model) sharding for logits tensors."""
+        if self.ctx is None:
+            return logits
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from .sharding import batch_spec
+        bs = batch_spec(self.ctx, logits.shape[0], logits.ndim)
+        parts = list(bs) if len(bs) == logits.ndim else \
+            list(bs) + [None] * (logits.ndim - len(bs))
+        v = logits.shape[-1]
+        m = self.ctx.mesh.shape[self.ctx.model_axis]
+        if v % m == 0:
+            parts[-1] = self.ctx.model_axis
+        return jax.lax.with_sharding_constraint(
+            logits, NamedSharding(self.ctx.mesh, P(*parts)))
+
+    def _cast(self, params):
+        """Mixed precision: bf16 compute copies of the fp32 masters."""
+        cd = self.cfg.compute_dtype
+        return jax.tree.map(
+            lambda a: a.astype(cd)
+            if hasattr(a, "dtype") and a.dtype == jnp.float32 else a,
+            params)
+
+    def logits_fn(self, params, batch):
+        """Full forward -> logits [B, T, V] (training / prefill math)."""
+        cfg = self.cfg
+        params = self._cast(params)
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = self._bshard(params["embed"][tokens].astype(cfg.compute_dtype))
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        enc_out = None
+        if cfg.arch_kind == "encdec":
+            enc_out = self._encode(params, batch["frames"])
+        x, aux, _ = self._run_blocks(params, x, positions=positions,
+                                     caches=None, cache_pos=None,
+                                     enc_out=enc_out, collect_cache=False)
+        x = L.rms_norm(params["final_norm"], x)
+        logits = jnp.einsum("btd,vd->btv", x,
+                            params["embed"].astype(cfg.compute_dtype))
+        return self._logits_shard(logits), aux
+
+    def loss_fn(self, params, batch):
+        logits, aux = self.logits_fn(params, batch)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        ll = jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return loss + 0.01 * aux
+
+    # ---- serving ----------------------------------------------------------
+    def prefill(self, params, batch):
+        """Full forward that also builds the decode caches."""
+        cfg = self.cfg
+        params = self._cast(params)
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = self._bshard(params["embed"][tokens].astype(cfg.compute_dtype))
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        enc_out = None
+        if cfg.arch_kind == "encdec":
+            enc_out = self._encode(params, batch["frames"])
+        x, aux, caches = self._run_blocks(
+            params, x, positions=positions, caches=None, cache_pos=None,
+            enc_out=enc_out, collect_cache=True, build=True)
+        if cfg.arch_kind == "encdec":
+            caches = dict(caches)
+            caches["cross_blocks"], caches["cross_tail"] = \
+                self._build_cross_caches(params, enc_out)
+        x = L.rms_norm(params["final_norm"], x)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1],
+                            params["embed"].astype(cfg.compute_dtype))
+        return self._logits_shard(logits), caches
+
+    def _build_cross_caches(self, params, enc_out):
+        cfg = self.cfg
+        pat, n_rep, tail = cfg.pattern()
+
+        def kv(p_attn):
+            k = jnp.einsum("btd,dhk->bthk", enc_out, p_attn["wk"])
+            v = jnp.einsum("btd,dhk->bthk", enc_out, p_attn["wv"])
+            return (k, v)
+
+        cross_blocks = tuple(
+            jax.vmap(lambda pa: kv(pa), in_axes=(0,))  # stack over n_rep
+            (params["blocks"][s]["xattn"]) for s in range(len(pat)))
+        cross_tail = tuple(kv(params["tail"][i]["xattn"])
+                           for i in range(len(tail)))
+        return cross_blocks, cross_tail
+
+    def init_cache(self, dims: DecodeDims):
+        """Allocate decode caches for every layer (pattern-aware sizes)."""
+        cfg = self.cfg
+        pat, n_rep, tail = cfg.pattern()
+        b, s = dims.batch, dims.seq
+        dt = cfg.compute_dtype
+
+        def one(spec):
+            if spec["kind"] == "attn":
+                sz = min(s, spec["window"]) if spec["window"] else s
+                return ((jnp.zeros((b, sz, cfg.n_kv_heads, cfg.hd), dt),
+                         jnp.zeros((b, sz, cfg.n_kv_heads, cfg.hd), dt)),)
+            if spec["kind"] == "mla":
+                return ((jnp.zeros((b, s, cfg.kv_lora_rank), dt),
+                         jnp.zeros((b, s, cfg.mla_rope_dim), dt)),)
+            d_in = cfg.ssm_expand * cfg.d_model
+            h = d_in // cfg.ssm_head_dim
+            return (jnp.zeros((b, h, cfg.ssm_state, cfg.ssm_head_dim),
+                              jnp.float32),
+                    jnp.zeros((b, cfg.ssm_conv - 1,
+                               d_in + 2 * cfg.ssm_state), dt))
+
+        def rep(spec):
+            c = one(spec)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_rep,) + a.shape), c)
+
+        caches = {"blocks": tuple(rep(sp) for sp in pat),
+                  "tail": tuple(one(sp) for sp in tail)}
+        if cfg.arch_kind == "encdec":
+            xkv = lambda: (  # noqa: E731
+                jnp.zeros((b, s, cfg.n_kv_heads, cfg.hd), dt),
+                jnp.zeros((b, s, cfg.n_kv_heads, cfg.hd), dt))
+            caches["cross_blocks"] = tuple(
+                jax.tree.map(lambda a: jnp.broadcast_to(
+                    a[None], (n_rep,) + a.shape), xkv()) for _ in pat)
+            caches["cross_tail"] = tuple(xkv() for _ in tail)
+        return caches
+
+    def cache_logical_axes(self, dims: DecodeDims):
+        """Logical-axis tree mirroring init_cache()'s structure."""
+        cfg = self.cfg
+        pat, n_rep, tail = cfg.pattern()
+
+        def one(spec, lead=()):
+            if spec["kind"] == "attn":
+                kv = lead + ("batch", "seq", "kv", "qkv")
+                return ((kv, kv),)
+            if spec["kind"] == "mla":
+                return ((lead + ("batch", "seq", None),
+                         lead + ("batch", "seq", None)),)
+            return (lead + ("batch", "heads", None, None),
+                    lead + ("batch", None, "mlp"))
+
+        axes = {"blocks": tuple(one(sp, ("layers",)) for sp in pat),
+                "tail": tuple(one(sp) for sp in tail)}
+        if cfg.arch_kind == "encdec":
+            kv = ("batch", "seq", "kv", "qkv")
+            axes["cross_blocks"] = tuple(
+                ((("layers",) + kv), (("layers",) + kv)) for _ in pat)
+            axes["cross_tail"] = tuple((kv, kv) for _ in tail)
+        return axes
+
+    def decode_step(self, params, caches, tokens, pos):
+        """One serving step: tokens [B,1] + caches at length S -> logits.
+
+        `pos` is the absolute position of the new token; each layer's
+        cache ring is updated at `pos % its_length`.
+        """
+        cfg = self.cfg
+        params = self._cast(params)
+        b = tokens.shape[0]
+        x = self._bshard(params["embed"][tokens].astype(cfg.compute_dtype))
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        x, aux, new_caches = self._run_blocks(
+            params, x, positions=positions, caches=caches,
+            cache_pos=pos, enc_out=None, collect_cache=True)
+        if cfg.arch_kind == "encdec":   # cross caches are read-only
+            new_caches = dict(new_caches)
+            new_caches["cross_blocks"] = caches["cross_blocks"]
+            new_caches["cross_tail"] = caches["cross_tail"]
+        x = L.rms_norm(params["final_norm"], x)
+        logits = jnp.einsum("btd,vd->btv", x,
+                            params["embed"].astype(cfg.compute_dtype))
+        return self._logits_shard(logits), new_caches
+
+
+def _prepend_axis(stacked):
+    """After vmap-stacking boxed params, prepend the 'layers' axis name."""
+    return jax.tree.map(
+        lambda b: Boxed(b.v, ("layers",) + tuple(b.ax)), stacked,
+        is_leaf=isbox)

@@ -1,0 +1,130 @@
+"""Logical-axis -> mesh PartitionSpec rules (MaxText-style).
+
+Parameters and activations carry *logical* axis names ("embed", "mlp",
+"heads", "vocab", "experts", ...).  A rule set maps each logical axis to
+zero or more mesh axes; `to_pspec` applies the rules to a whole tree of
+axis tuples, skipping mesh axes that do not divide the dimension (so the
+same rules work for every architecture).
+
+Default layout (single pod 16x16, multi-pod 2x16x16):
+    batch   -> ("pod", "data")     tensor axes -> "model"
+    fsdp: the "embed" axis of *weights* is sharded over "data", giving 2D
+    weight sharding (ZeRO-3-style) so grok-1/qwen3-moe optimizer state
+    fits per-chip HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Mesh
+    batch_axes: tuple = ("data",)     # ("pod", "data") multi-pod
+    model_axis: str = "model"
+    fsdp_axes: tuple = ("data",)      # weight "embed" dim sharding
+    # rules: logical axis -> tuple of mesh axes (applied if divisible)
+    extra_rules: Any = None
+
+    def rules(self, *, for_weights: bool) -> dict:
+        r = {
+            "batch": tuple(self.batch_axes),
+            "vocab": (self.model_axis,),
+            "heads": (self.model_axis,),
+            "kv": (self.model_axis,),
+            "mlp": (self.model_axis,),
+            "experts": (self.model_axis,),
+            "qkv": (),
+            "layers": (),
+            "seq": (),
+            "embed": tuple(self.fsdp_axes) if for_weights else (),
+        }
+        if self.extra_rules:
+            r.update(self.extra_rules)
+        return r
+
+    def axis_size(self, names) -> int:
+        s = 1
+        for nm in names:
+            s *= self.mesh.shape[nm]
+        return s
+
+
+def _spec_for(axes: tuple, shape: tuple, rules: dict,
+              used_check: bool = True) -> P:
+    """Build a PartitionSpec for one array, dropping non-dividing axes."""
+    parts = []
+    used = set()
+    for dim, ax in enumerate(axes):
+        if ax is None or ax not in rules:
+            parts.append(None)
+            continue
+        mesh_axes = tuple(a for a in rules[ax] if a not in used)
+        size = int(np.prod([_MESH_SIZES[a] for a in mesh_axes])) \
+            if mesh_axes else 1
+        if mesh_axes and shape[dim] % size == 0:
+            parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+            used.update(mesh_axes)
+        else:
+            # try a prefix of the mesh axes that divides
+            ok = None
+            for k in range(len(mesh_axes) - 1, 0, -1):
+                sub = mesh_axes[:k]
+                size = int(np.prod([_MESH_SIZES[a] for a in sub]))
+                if shape[dim] % size == 0:
+                    ok = sub
+                    break
+            if ok:
+                parts.append(ok if len(ok) > 1 else ok[0])
+                used.update(ok)
+            else:
+                parts.append(None)
+    return P(*parts)
+
+
+_MESH_SIZES: dict = {}
+
+
+def tree_pspecs(axes_tree, shape_tree, ctx: ParallelCtx,
+                for_weights: bool = True):
+    """Map a tree of logical-axis tuples + shapes to PartitionSpecs."""
+    global _MESH_SIZES
+    _MESH_SIZES = dict(ctx.mesh.shape)
+    rules = ctx.rules(for_weights=for_weights)
+
+    def one(axes, shaped):
+        return _spec_for(tuple(axes), tuple(shaped.shape), rules)
+
+    def is_axes_leaf(x):
+        return isinstance(x, tuple) and len(x) > 0 and all(
+            isinstance(e, (str, type(None))) for e in x)
+
+    return jax.tree.map(one, axes_tree, shape_tree, is_leaf=is_axes_leaf)
+
+
+def tree_shardings(axes_tree, shape_tree, ctx: ParallelCtx,
+                   for_weights: bool = True):
+    specs = tree_pspecs(axes_tree, shape_tree, ctx, for_weights)
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(ctx: ParallelCtx, batch_size: int, ndim: int) -> P:
+    """Spec for a [B, ...] array: shard batch if divisible, else replicate."""
+    bsz_axes = tuple(ctx.batch_axes)
+    size = ctx.axis_size(bsz_axes)
+    if batch_size % size == 0:
+        return P(bsz_axes if len(bsz_axes) > 1 else bsz_axes[0],
+                 *([None] * (ndim - 1)))
+    # try prefix
+    for k in range(len(bsz_axes) - 1, 0, -1):
+        if batch_size % ctx.axis_size(bsz_axes[:k]) == 0:
+            sub = bsz_axes[:k]
+            return P(sub if len(sub) > 1 else sub[0],
+                     *([None] * (ndim - 1)))
+    return P(*([None] * ndim))

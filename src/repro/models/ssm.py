@@ -1,0 +1,193 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Implements the chunked, matmul-dominant SSD form (TPU/MXU-friendly):
+within-chunk attention-like term + inter-chunk state recurrence.  Used by
+`mamba2-1.3b` (pure SSM) and `jamba-v0.1-52b` (hybrid).  The per-chunk
+core can be dispatched to the Pallas kernel in repro/kernels/ssd_scan.
+
+Decode keeps the recurrent state  S [B, H, P, N]  plus a depthwise-conv
+ring cache; one step is O(H*P*N) — this is what makes `long_500k`
+(524288-token decode) linear-cost for SSM archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import Boxed, _norm
+
+
+def init_mamba2(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    hp = cfg.ssm_head_dim
+    h = d_in // hp
+    n = cfg.ssm_state
+    conv_dim = d_in + 2 * n                     # x, B, C share the conv
+    ks = jax.random.split(key, 7)
+    # projections kept separate so each output dim shards cleanly (TP)
+    return {
+        "in_z": Boxed(_norm(ks[0], (d, d_in), dtype=dtype),
+                      ("embed", "mlp")),
+        "in_x": Boxed(_norm(ks[1], (d, d_in), dtype=dtype),
+                      ("embed", "mlp")),
+        "in_b": Boxed(_norm(ks[2], (d, n), dtype=dtype), ("embed", None)),
+        "in_c": Boxed(_norm(ks[3], (d, n), dtype=dtype), ("embed", None)),
+        "in_dt": Boxed(_norm(ks[4], (d, h), dtype=dtype),
+                       ("embed", "heads")),
+        "conv_w": Boxed(_norm(ks[5], (cfg.ssm_conv, conv_dim), 0.2,
+                              dtype=dtype), (None, "mlp")),
+        "conv_b": Boxed(jnp.zeros((conv_dim,), dtype), ("mlp",)),
+        "a_log": Boxed(jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+                       ("heads",)),
+        "d_skip": Boxed(jnp.ones((h,), dtype), ("heads",)),
+        "dt_bias": Boxed(jnp.zeros((h,), dtype), ("heads",)),
+        "norm_w": Boxed(jnp.ones((d_in,), dtype), ("mlp",)),
+        "out_proj": Boxed(_norm(ks[6], (d_in, d), dtype=dtype),
+                          ("mlp", "embed")),
+    }
+
+
+def _gated_norm(y, z, w, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + eps)
+    return y * w.astype(jnp.float32)
+
+
+def ssd_chunked_core(x, dt, a, b_mat, c_mat, chunk: int,
+                     initial_state=None):
+    """The SSD algorithm over chunks (pure jnp; Pallas kernel oracle).
+
+    x:  [B, T, H, P]  inputs (already conv'd / activated)
+    dt: [B, T, H]     positive step sizes
+    a:  [H]           negative decay rates
+    b_mat, c_mat: [B, T, N]
+    Returns (y [B,T,H,P], final_state [B,H,N,P]).
+    """
+    bsz, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = chunk
+    nc = t // q
+    assert t % q == 0, f"T={t} must be a multiple of chunk={q}"
+
+    xr = x.reshape(bsz, nc, q, h, p)
+    dtr = dt.reshape(bsz, nc, q, h)
+    br = b_mat.reshape(bsz, nc, q, n)
+    cr = c_mat.reshape(bsz, nc, q, n)
+
+    da = dtr * a[None, None, None, :]                   # [B,nc,Q,H] (<=0)
+    cum = jnp.cumsum(da, axis=2)                        # within chunk
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # within-chunk (quadratic in Q, matmul-dominant)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cr, br,
+                    preferred_element_type=jnp.float32)  # [B,nc,Q,Q]
+    xdt = xr * dtr[..., None]
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", cb, l_mat,
+                        xdt.astype(jnp.float32))
+
+    # chunk summary states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    decay_tail = jnp.exp(cum[:, :, -1:, :] - cum)        # [B,nc,Q,H]
+    states = jnp.einsum("bckn,bckh,bckhp->bchnp",
+                        br.astype(jnp.float32),
+                        (decay_tail * dtr).astype(jnp.float32),
+                        xr.astype(jnp.float32))          # [B,nc,H,N,P]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # [B,nc,H]
+
+    # inter-chunk recurrence (scan over chunks)
+    s0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp                                    # [B,H,N,P],[B,H]
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    states_t = jnp.moveaxis(states, 1, 0)                # [nc,B,H,N,P]
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)            # [nc,B,H]
+    s_final, s_in = jax.lax.scan(scan_fn, s0, (states_t, decay_t))
+    s_in = jnp.moveaxis(s_in, 0, 1)                      # [B,nc,H,N,P]
+
+    y_inter = jnp.einsum("bcqn,bchnp->bcqhp", cr.astype(jnp.float32), s_in)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+    y = (y_diag + y_inter).reshape(bsz, t, h, p)
+    return y.astype(x.dtype), s_final
+
+
+def mamba2_block(params, x, cfg, *, state=None, conv_cache=None,
+                 use_kernel=False, build_cache=False):
+    """Full Mamba2 block.
+
+    * train/prefill: state=None — chunked SSD over the sequence.
+    * decode: x [B,1,D]; state [B,H,N,P] and conv_cache [B,K-1,conv_dim]
+      are updated recurrently.
+    Returns (out, (new_state, new_conv_cache)).
+    """
+    bsz, t, d = x.shape
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hp = cfg.ssm_head_dim
+    h = d_in // hp
+    kc = cfg.ssm_conv
+
+    z = jnp.einsum("btd,dk->btk", x, params["in_z"])
+    xin = jnp.einsum("btd,dk->btk", x, params["in_x"])
+    bin_ = jnp.einsum("btd,dn->btn", x, params["in_b"])
+    cin = jnp.einsum("btd,dn->btn", x, params["in_c"])
+    dt = jnp.einsum("btd,dh->bth", x, params["in_dt"])
+    xc = jnp.concatenate([xin, bin_, cin], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    if state is None:
+        # causal depthwise conv along T
+        pad = jnp.pad(xc, ((0, 0), (kc - 1, 0), (0, 0)))
+        conv = sum(pad[:, i:i + t] * params["conv_w"][i][None, None, :]
+                   for i in range(kc)) + params["conv_b"]
+        conv = jax.nn.silu(conv)
+        xs = conv[..., :d_in].reshape(bsz, t, h, hp)
+        bm = conv[..., d_in:d_in + n]
+        cm = conv[..., d_in + n:]
+        if use_kernel and t % cfg.ssm_chunk == 0:
+            from repro.kernels.ssd_scan import ops as sops
+            y, s_final = sops.ssd_scan(xs, dt, a, bm, cm,
+                                       chunk=cfg.ssm_chunk)
+        else:
+            chunk = min(cfg.ssm_chunk, t)
+            if t % chunk != 0:
+                chunk = t
+            y, s_final = ssd_chunked_core(xs, dt, a, bm, cm, chunk)
+        if build_cache:
+            pad_t = max(kc - 1 - t, 0)
+            tail_xc = xc[:, max(t - (kc - 1), 0):]
+            new_conv_cache = jnp.pad(tail_xc, ((0, 0), (pad_t, 0), (0, 0)))
+        else:
+            new_conv_cache = None
+    else:
+        # single-token recurrence
+        cc = jnp.concatenate([conv_cache, xc], axis=1)    # [B,K,convdim]
+        conv = (jnp.einsum("bkc,kc->bc", cc, params["conv_w"])
+                + params["conv_b"])[:, None, :]
+        conv = jax.nn.silu(conv)
+        xs = conv[..., :d_in].reshape(bsz, 1, h, hp)
+        bm = conv[..., d_in:d_in + n]
+        cm = conv[..., d_in + n:]
+        da = jnp.exp(dt[:, 0] * a[None, :])               # [B,H]
+        s = state.astype(jnp.float32)
+        upd = jnp.einsum("bn,bhp,bh->bhnp", bm[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32), dt[:, 0])
+        s_final = s * da[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", cm[:, 0].astype(jnp.float32),
+                       s_final)[:, None]                  # [B,1,H,P]
+        new_conv_cache = cc[:, 1:]
+
+    y = y + xs.astype(jnp.float32) * \
+        params["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, t, d_in)
+    y = _gated_norm(y, z, params["norm_w"]).astype(x.dtype)
+    out = jnp.einsum("btk,kd->btd", y, params["out_proj"])
+    return out, (s_final, new_conv_cache)

@@ -1,0 +1,76 @@
+"""AdamW with global-norm clipping (pure JAX, optimizer state shards like
+the parameters — ZeRO-style since params are FSDP-sharded over "data").
+
+Gradient "compression": the backward pass runs in bf16 (compute dtype),
+so every gradient collective the partitioner inserts moves bf16, not
+fp32 — the 2x wire-compression falls out of the mixed-precision design
+rather than a bolt-on cast (DESIGN.md §4).  An optional stochastic-
+rounding-free fp32 accumulation happens here at the master update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> AdamWState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=z,
+                      v=jax.tree.map(jnp.copy, z))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: AdamWState,
+                 lr_scale=1.0):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * (g * g)
+        mh = m / b1c
+        vh = v / b2c
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                          + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), m, v
+
+    p_flat, tdef = jax.tree.flatten(params)
+    g_flat = jax.tree.leaves(grads)
+    m_flat = jax.tree.leaves(state.m)
+    v_flat = jax.tree.leaves(state.v)
+    res = [upd(p, g, m, v) for p, g, m, v in
+           zip(p_flat, g_flat, m_flat, v_flat)]
+    new_p = jax.tree.unflatten(tdef, [r[0] for r in res])
+    new_m = jax.tree.unflatten(tdef, [r[1] for r in res])
+    new_v = jax.tree.unflatten(tdef, [r[2] for r in res])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm

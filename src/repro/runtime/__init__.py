@@ -1,0 +1,1 @@
+from .fault import retry, StepWatchdog, Heartbeat, elastic_batch  # noqa

@@ -1,0 +1,113 @@
+"""Checkpoint (atomicity, retention, async, elastic restore) and
+fault-tolerance primitive tests."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.runtime import StepWatchdog, Heartbeat, elastic_batch, retry
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+            "opt": {"m": jnp.zeros((8, 4)), "step": jnp.int32(7)},
+            "blocks": [jnp.ones((2, 3)), jnp.arange(5)]}
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    t = _tree()
+    save_checkpoint(d, 10, t)
+    assert latest_step(d) == 10
+    got = restore_checkpoint(d, 10, jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention_and_latest(tmp_path):
+    d = str(tmp_path / "ck")
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, t, keep=2)
+    steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert len(steps) == 2
+    assert latest_step(d) == 5
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path / "ck")
+    ck = AsyncCheckpointer(d)
+    t = _tree()
+    ck.save(3, t)
+    ck.wait()
+    assert latest_step(d) == 3
+    got = restore_checkpoint(d, 3, jax.tree.map(jnp.zeros_like, t))
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(t["w"]))
+
+
+def test_elastic_restore_new_sharding(tmp_path):
+    """Restore under a (trivially) different mesh placement."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    d = str(tmp_path / "ck")
+    t = _tree()
+    save_checkpoint(d, 1, t)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shards = jax.tree.map(
+        lambda x: NamedSharding(mesh, P(*([None] * jnp.ndim(x)))), t)
+    got = restore_checkpoint(d, 1, t, shardings=shards)
+    assert got["w"].sharding.mesh.shape["data"] == 1
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(t["w"]))
+
+
+def test_tmp_dirs_not_trusted(tmp_path):
+    d = str(tmp_path / "ck")
+    t = _tree()
+    save_checkpoint(d, 1, t)
+    os.makedirs(os.path.join(d, "step_00000099.tmp0"))
+    assert latest_step(d) == 1
+
+
+def test_watchdog_flags_straggler():
+    wd = StepWatchdog(window=16, factor=2.0)
+    for _ in range(10):
+        assert not wd.observe(1.0)
+    assert wd.observe(5.0)
+    assert wd.flagged == 1
+
+
+def test_heartbeat(tmp_path):
+    p = str(tmp_path / "hb.json")
+    hb = Heartbeat(p, interval_s=100)
+    hb.beat({"step": 5})
+    import json
+    with open(p) as f:
+        data = json.load(f)
+    assert data["step"] == 5
+    hb.stop()
+
+
+def test_elastic_batch():
+    per, scale = elastic_batch(256, 16)
+    assert per == 16 and scale == 1.0
+    per, scale = elastic_batch(256, 12)   # lost 4 hosts
+    assert per == 22 and scale == pytest.approx(264 / 256)
+
+
+def test_retry():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retry(flaky, retries=4, backoff_s=0.01)() == "ok"
+    assert len(calls) == 3

@@ -1,0 +1,109 @@
+"""Exercise the distributed code paths on a trivial 1x1 mesh (CPU):
+shard_map MoE (both variants) vs the dropless ragged oracle, sequence
+parallelism, and the distributed decode attention."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch import steps as St
+from repro.models import Model, unbox
+
+
+def _ctx():
+    return St.build_ctx(make_host_mesh())
+
+
+def _batch(cfg, b=2, t=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, t)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, t)),
+                                  jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ["qwen3_moe_235b_a22b", "grok_1_314b",
+                                  "jamba_v0_1_52b"])
+def test_moe_ep_matches_ragged(arch):
+    """With ample capacity the shard_map EP path equals dropless ragged."""
+    cfg = dataclasses.replace(get_config(arch, smoke=True),
+                              capacity_factor=8.0)
+    m_ref = Model(cfg)
+    params, _ = unbox(m_ref.init(jax.random.PRNGKey(0)))
+    batch = _batch(cfg)
+    ctx = _ctx()
+    m_ep = Model(cfg, ctx=ctx)
+    with ctx.mesh:
+        loss_ep = jax.jit(m_ep.loss_fn)(params, batch)
+    loss_ref = jax.jit(m_ref.loss_fn)(params, batch)
+    assert float(abs(loss_ep - loss_ref)) < 2e-2, (float(loss_ep),
+                                                   float(loss_ref))
+
+
+def test_moe_stationary_used_for_small_batches():
+    """Tiny token counts route through moe_ep_stationary (decode path)."""
+    cfg = dataclasses.replace(get_config("grok_1_314b", smoke=True),
+                              capacity_factor=8.0)
+    ctx = _ctx()
+    m = Model(cfg, ctx=ctx)
+    m_ref = Model(cfg)
+    params, _ = unbox(m_ref.init(jax.random.PRNGKey(0)))
+    batch = _batch(cfg, b=2, t=8)   # 16 tokens << 2048 -> stationary
+    with ctx.mesh:
+        l1 = jax.jit(m.loss_fn)(params, batch)
+    l2 = jax.jit(m_ref.loss_fn)(params, batch)
+    assert float(abs(l1 - l2)) < 2e-2
+
+
+def test_seq_parallel_matches_reference():
+    """seq_parallel=True must not change the math (1x1 mesh)."""
+    cfg = get_config("starcoder2_3b", smoke=True)
+    ctx = _ctx()
+    m_ref = Model(cfg)
+    params, _ = unbox(m_ref.init(jax.random.PRNGKey(0)))
+    batch = _batch(cfg)
+    m_sp = Model(dataclasses.replace(cfg, n_heads=3, n_kv_heads=3,
+                                     head_dim=16, d_model=48, d_ff=96),
+                 ctx=ctx)
+    # rebuild reference with the same (seq-parallel-triggering) dims
+    cfg2 = m_sp.cfg
+    assert cfg2.seq_parallel is False or True  # documented via ctx below
+    m_ref2 = Model(dataclasses.replace(cfg2, seq_parallel=False))
+    params2, _ = unbox(m_ref2.init(jax.random.PRNGKey(1)))
+    with ctx.mesh:
+        l_sp = jax.jit(m_sp.loss_fn)(params2, batch)
+    l_ref = jax.jit(m_ref2.loss_fn)(params2, batch)
+    assert float(abs(l_sp - l_ref)) < 1e-2
+
+
+def test_distributed_decode_attention_matches():
+    """decode_attention_dist == dense decode on a 1-shard mesh."""
+    from repro.models import layers as L
+    cfg = get_config("qwen3_1_7b", smoke=True)
+    ctx = _ctx()
+    rng = np.random.default_rng(3)
+    b, s, kv, hd, h = 2, 8, 2, 16, 4
+    q = jnp.asarray(rng.normal(0, 1, (b, 1, h, hd)), jnp.float32)
+    kn = jnp.asarray(rng.normal(0, 1, (b, 1, kv, hd)), jnp.float32)
+    vn = jnp.asarray(rng.normal(0, 1, (b, 1, kv, hd)), jnp.float32)
+    ck = jnp.asarray(rng.normal(0, 1, (b, s, kv, hd)), jnp.float32)
+    cv = jnp.asarray(rng.normal(0, 1, (b, s, kv, hd)), jnp.float32)
+    pos = 5
+    with ctx.mesh:
+        out, (ck2, cv2) = L.decode_attention_dist(
+            None, q, kn, vn, (ck, cv), pos, cfg, ctx)
+    # reference: update cache then dense softmax attention
+    ck_r = ck.at[:, pos].set(kn[:, 0])
+    cv_r = cv.at[:, pos].set(vn[:, 0])
+    kr = jnp.repeat(ck_r, h // kv, 2)
+    vr = jnp.repeat(cv_r, h // kv, 2)
+    sc = jnp.einsum("bqhd,bshd->bhqs", q, kr) / np.sqrt(hd)
+    w = jax.nn.softmax(sc, -1)
+    ref = jnp.einsum("bhqs,bshd->bqhd", w, vr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(ck2), np.asarray(ck_r))

@@ -1,0 +1,76 @@
+"""Cycle-accurate simulator tests: conservation, plateau behaviour,
+consistency with the analytic channel-load bound."""
+import numpy as np
+import pytest
+
+from repro.core import topology as T, traffic as TR
+from repro.core.routing import build_routing
+from repro.core.simulator import SimConfig, simulate, \
+    saturation_throughput, zero_load_latency
+
+CFG = SimConfig(cycles=1500, warmup=500)
+
+
+@pytest.fixture(scope="module")
+def fht16():
+    topo = T.build("folded_hexa_torus", 16)
+    return build_routing(topo)
+
+
+def test_low_load_delivery(fht16):
+    """At 10 % of saturation, delivered == offered (no loss)."""
+    u = TR.uniform(fht16.topo)
+    res = simulate(fht16, u, [0.05], CFG)
+    assert res["throughput"][0] >= 0.85 * res["offered"][0]
+
+
+def test_throughput_plateaus(fht16):
+    u = TR.uniform(fht16.topo)
+    res = simulate(fht16, u, [0.2, 0.5, 0.9, 1.0], CFG)
+    thr = res["throughput"]
+    # monotone-ish up to plateau; last two within 15 %
+    assert thr[1] > thr[0]
+    assert abs(thr[3] - thr[2]) < 0.15 * max(thr[2], 1e-6)
+
+
+def test_sim_below_analytic_bound(fht16):
+    """The analytic channel-load rate is an upper bound for the sim."""
+    u = TR.uniform(fht16.topo)
+    out = saturation_throughput(fht16, u, CFG, n_rates=5)
+    assert out["sim_saturation"] <= out["analytic_saturation"] * 1.1
+    assert out["sim_saturation"] >= 0.4 * out["analytic_saturation"]
+
+
+def test_latency_grows_with_load(fht16):
+    u = TR.uniform(fht16.topo)
+    res = simulate(fht16, u, [0.1, 1.0], CFG)
+    assert res["latency"][1] > res["latency"][0]
+
+
+def test_zero_load_latency_close_to_sim(fht16):
+    """Sim latency at very low load ~ analytic zero-load latency."""
+    u = TR.uniform(fht16.topo)
+    zl = zero_load_latency(fht16, u)
+    res = simulate(fht16, u, [0.02], CFG)
+    assert res["latency"][0] == pytest.approx(zl, rel=0.35)
+
+
+def test_mesh_vs_fht_simulated():
+    """Fig. 4: FHT sustains higher simulated throughput than Mesh.
+
+    (N=16 is the paper's smallest, tightest-margin point — Fig. 7 even
+    shows other topologies edging FHT there; we assert strictly higher.)"""
+    out = {}
+    for name in ("mesh", "folded_hexa_torus"):
+        r = build_routing(T.build(name, 16))
+        out[name] = saturation_throughput(
+            r, TR.uniform(r.topo), CFG, n_rates=5)["sim_saturation"]
+    assert out["folded_hexa_torus"] > 1.05 * out["mesh"]
+
+
+def test_hetero_traffic_runs():
+    topo = T.build("folded_hexa_torus", 16, roles_scheme="hetero_cm")
+    r = build_routing(topo)
+    m = TR.hetero_mix(topo)
+    res = simulate(r, m, [0.2], CFG)
+    assert res["throughput"][0] > 0

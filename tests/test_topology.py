@@ -1,0 +1,185 @@
+"""Paper validation: Table III structural properties, Table I area,
+Fig. 2 link-rate anchors, and generator invariants (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+from repro.core import linkmodel as lm
+from repro.core import costmodel as cm
+from repro.core import placement as pl
+
+BENCH_NS = [16, 36, 64, 100, 144, 196, 256]
+
+
+# ---------------------------------------------------------------------
+# Table III — diameter / radix / link-range
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("r", [2, 3, 4, 5, 6, 7, 8])
+def test_folded_hexa_torus_diameter_formula(r):
+    """Paper: diameter(FHT) = sqrt(12N-3)/6 + 1/2 (exact at hex N)."""
+    n = 3 * r * r + 3 * r + 1
+    t = T.build("folded_hexa_torus", n, hex_region=True)
+    expected = np.sqrt(12 * n - 3) / 6 + 0.5
+    assert t.diameter == round(expected)
+    assert t.radix == 6
+    assert t.link_ranges().max() == 1
+
+
+@pytest.mark.parametrize("r", [2, 3, 4, 5, 6])
+def test_hexamesh_diameter_formula(r):
+    """Paper: diameter(HexaMesh) = sqrt(12N-3)/3 - 1."""
+    n = 3 * r * r + 3 * r + 1
+    t = T.build("hexamesh", n, hex_region=True)
+    assert t.diameter == round(np.sqrt(12 * n - 3) / 3 - 1)
+    assert t.radix == 6
+    assert t.link_ranges().max() == 0
+
+
+@pytest.mark.parametrize("n", [16, 64, 256])
+def test_mesh_and_folded_torus_diameters(n):
+    s = int(np.sqrt(n))
+    assert T.build("mesh", n).diameter == 2 * s - 2
+    assert T.build("folded_torus", n).diameter == 2 * (s // 2)
+    assert T.build("torus", n).diameter == 2 * (s // 2)
+
+
+@pytest.mark.parametrize("n", [16, 64, 256])
+def test_radix_table(n):
+    expect = {"mesh": 4, "torus": 4, "folded_torus": 4, "hexamesh": 6,
+              "folded_hexa_torus": 6, "octamesh": 8, "folded_octa_torus": 8,
+              "honeycomb_mesh": 3, "honeycomb_torus": 3,
+              "kite_medium": 4, "kite_large": 4, "sid_mesh": 4,
+              "cluscross_v1": 4, "cluscross_v2": 4}
+    for name, r in expect.items():
+        t = T.build(name, n)
+        assert t.radix == r, (name, n, t.radix)
+
+
+@pytest.mark.parametrize("n", [16, 64, 256])
+def test_flattened_butterfly(n):
+    t = T.build("flattened_butterfly", n)
+    s = int(np.sqrt(n))
+    assert t.diameter == 2
+    assert t.radix == 2 * (s - 1)
+
+
+def test_hypercube_diameter():
+    for n in (16, 64, 256):
+        t = T.build("hypercube", n)
+        assert t.diameter == int(np.log2(n))
+
+
+@pytest.mark.parametrize("name", sorted(T.GENERATORS))
+@pytest.mark.parametrize("n", [16, 64])
+def test_all_connected_and_ranges(name, n):
+    if name in T.N_CONSTRAINTS and not T.N_CONSTRAINTS[name](n):
+        pytest.skip("N constraint")
+    t = T.build(name, n)
+    assert t.is_connected()
+    # link-range: folded topologies must be exactly <= 1 except octa diag
+    if name == "folded_torus":
+        assert t.link_ranges().max() == 1
+    if name == "folded_hexa_torus":
+        assert t.link_ranges().max() == 1
+
+
+def test_folded_halves_diameter():
+    """Principle 1+2: folding roughly halves the diameter."""
+    for n in (64, 144, 256):
+        assert T.build("folded_torus", n).diameter <= \
+            T.build("mesh", n).diameter / 2 + 1
+        assert T.build("folded_hexa_torus", n).diameter <= \
+            T.build("hexamesh", n).diameter / 2 + 2
+
+
+# ---------------------------------------------------------------------
+# Table I — area; §V-C PHY fractions
+# ---------------------------------------------------------------------
+
+def test_table1_area_overheads():
+    """Radix-6 vs Mesh chiplet area: +4.34/2.27/1.16 % at 37/74/148 mm^2
+    and PHY fractions 4.54 % (radix 4) / 6.66 % (radix 6)."""
+    for area, pct in ((37.0, 4.34), (74.0, 2.27), (148.0, 1.16)):
+        mesh = T.build("mesh", 64, chiplet_area_mm2=area)
+        fht = T.build("folded_hexa_torus", 64, chiplet_area_mm2=area)
+        rel = (cm.chiplet_area_mm2(fht) / cm.chiplet_area_mm2(mesh) - 1)
+        assert abs(rel * 100 - pct) < 0.02, (area, rel * 100, pct)
+    mesh74 = T.build("mesh", 64)
+    fht74 = T.build("folded_hexa_torus", 64)
+    assert abs(cm.phy_area_fraction(mesh74) * 100 - 4.54) < 0.02
+    assert abs(cm.phy_area_fraction(fht74) * 100 - 6.66) < 0.02
+
+
+# ---------------------------------------------------------------------
+# Fig. 2 — link rate anchors
+# ---------------------------------------------------------------------
+
+def test_fig2_anchors():
+    # range-1 band (74 mm^2): 17.5-24.7 mm
+    assert lm.rate_fraction(17.5, "glass") >= 0.99
+    assert lm.rate_fraction(24.7, "glass") >= 0.99
+    assert 0.88 <= lm.rate_fraction(24.7, "organic") <= 0.97
+    # range-2 worst case 37.2 mm
+    assert abs(lm.rate_fraction(37.2, "organic") - 0.47) < 0.02
+    assert abs(lm.rate_fraction(37.2, "glass") - 0.66) < 0.02
+    # hard 70 mm limit
+    assert lm.rate_fraction(71.0, "organic") == 0.0
+    assert lm.rate_fraction(71.0, "glass") == 0.0
+    # passive interposer collapses past 4 mm
+    assert lm.rate_fraction(4.0, "passive_interposer") == 1.0
+    assert lm.rate_fraction(10.0, "passive_interposer") <= 0.15
+
+
+def test_long_link_topologies_die_at_256():
+    """§V-C: Torus/ClusCross/HoneycombTorus/FlattenedButterfly exceed
+    70 mm at N=256 -> zero absolute throughput."""
+    for name in ("torus", "cluscross_v1", "honeycomb_torus",
+                 "flattened_butterfly"):
+        t = T.build(name, 256)
+        assert t.max_link_length_mm() > lm.MAX_LINK_LENGTH_MM
+        assert cm.absolute_throughput_gbps(t, 1.0) == 0.0
+    for name in ("mesh", "folded_hexa_torus", "folded_torus", "hexamesh"):
+        t = T.build(name, 256)
+        assert cm.absolute_throughput_gbps(t, 0.1) > 0.0
+
+
+# ---------------------------------------------------------------------
+# hypothesis invariants
+# ---------------------------------------------------------------------
+
+@given(k=st.integers(min_value=2, max_value=40))
+@settings(max_examples=25, deadline=None)
+def test_fold_chain_is_single_cycle(k):
+    """fold_chain turns a k-chain into a single ring (degree 2, k edges,
+    connected) with diameter floor(k/2)."""
+    import networkx as nx
+    edges = T.fold_chain(list(range(k)))
+    g = nx.Graph(edges)
+    if k == 2:
+        assert g.number_of_edges() == 1
+        return
+    assert g.number_of_edges() == k
+    assert all(d == 2 for _, d in g.degree())
+    assert nx.is_connected(g)
+    assert nx.diameter(g) == k // 2
+
+
+@given(n=st.sampled_from([16, 36, 64, 100]),
+       name=st.sampled_from(sorted(T.GENERATORS)))
+@settings(max_examples=30, deadline=None)
+def test_generator_invariants(n, name):
+    if name in T.N_CONSTRAINTS and not T.N_CONSTRAINTS[name](n):
+        return
+    t = T.build(name, n)
+    assert t.n == n
+    assert t.is_connected()
+    assert (t.edges[:, 0] != t.edges[:, 1]).all()
+    # undirected edges unique
+    key = t.edges[:, 0].astype(np.int64) * n + t.edges[:, 1]
+    assert len(np.unique(key)) == len(key)
+    # roles partition the chiplets
+    roles = pl.assign_roles(t.pos, "hetero_cm")
+    assert set(np.unique(roles)) <= {"C", "M"}
+    assert (roles == "M").sum() > 0
