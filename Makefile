@@ -1,0 +1,20 @@
+# Convenience targets (see README.md).  PYTHONPATH is set explicitly so
+# the targets work without `pip install -e .`.
+PY := PYTHONPATH=src python
+
+.PHONY: test bench bench-smoke bench-sim examples
+
+test:                 ## tier-1 verify
+	$(PY) -m pytest -x -q
+
+bench:                ## all paper figures, analytic model
+	$(PY) -m benchmarks.run
+
+bench-sim:            ## all paper figures, cycle-accurate simulator
+	$(PY) -m benchmarks.run --sim
+
+bench-smoke:          ## tiny batched-vs-looped sweep, < 60 s, bitwise-checked
+	$(PY) -m benchmarks.sweep_bench --smoke
+
+examples:             ## quickstart example
+	$(PY) examples/quickstart.py

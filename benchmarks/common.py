@@ -1,20 +1,25 @@
-"""Shared benchmark helpers: evaluate one (topology, N, substrate,
-traffic) cell analytically (channel-load bound + zero-load latency) or
-with the cycle-accurate simulator."""
+"""Shared benchmark helpers: evaluate (topology, N, substrate, traffic)
+cells analytically (channel-load bound + zero-load latency) or with the
+cycle-accurate simulator.
+
+Simulated evaluation goes through the batched sweep engine
+(`repro.sweep.SweepEngine`, DESIGN.md §6): all cells of a figure are
+padded into a handful of compiled programs instead of recompiling the
+simulator per topology — the speedup is recorded by
+`benchmarks/sweep_bench.py` in results/sweep_speedup.csv.
+"""
 from __future__ import annotations
 
-import functools
 import os
 import time
 
 import numpy as np
 
 from repro.core import costmodel as cm
-from repro.core import topology as T
 from repro.core import traffic as TR
-from repro.core.routing import build_routing
-from repro.core.simulator import SimConfig, saturation_throughput, \
-    zero_load_latency
+from repro.core.routing import cached_routing
+from repro.core.simulator import SimConfig, zero_load_latency
+from repro.sweep.engine import SweepCase, SweepEngine
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -22,44 +27,68 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 SIZES = [16, 64, 144, 256]
 SIZES_FULL = [16, 36, 64, 100, 144, 196, 256]
 
+BENCH_SIM_CFG = SimConfig(cycles=2000, warmup=700)
 
-@functools.lru_cache(maxsize=4096)
-def _routing(name: str, n: int, substrate: str, area: float,
-             roles: str, hex_region: bool = False):
-    topo = T.build(name, n, substrate=substrate, chiplet_area_mm2=area,
-                   roles_scheme=roles, hex_region=hex_region)
-    return topo, build_routing(topo)
+_ENGINES: dict[SimConfig, SweepEngine] = {}
 
 
-def evaluate(name: str, n: int, substrate: str = "organic",
-             pattern: str = "uniform", area: float = 74.0,
-             roles: str = "homogeneous", use_sim: bool = False,
-             sim_cfg: SimConfig = SimConfig(cycles=2000, warmup=700)):
-    """Returns a dict with the paper's §V-B metrics for one cell."""
-    if name in T.N_CONSTRAINTS and not T.N_CONSTRAINTS[name](n):
-        return None
-    topo, routing = _routing(name, n, substrate, area, roles)
-    tm = TR.PATTERNS[pattern](topo)
+def engine_for(cfg: SimConfig = BENCH_SIM_CFG) -> SweepEngine:
+    """One engine per SimConfig so all figures share executables."""
+    if cfg not in _ENGINES:
+        _ENGINES[cfg] = SweepEngine(cfg=cfg)
+    return _ENGINES[cfg]
+
+
+def _cell_row(case: SweepCase, sim_res: dict | None) -> dict:
+    """Paper §V-B metrics for one cell; sim_res overrides the analytic
+    saturation/latency when the cell was simulated."""
+    topo, routing = cached_routing(case.name, case.n, case.substrate,
+                                   case.area, case.roles)
+    tm = TR.PATTERNS[case.pattern](topo)
     t_r = routing.saturation_rate(tm)
     lat = zero_load_latency(routing, tm)
-    sim_sat = None
-    if use_sim:
-        out = saturation_throughput(routing, tm, sim_cfg, n_rates=6)
-        sim_sat = out["sim_saturation"]
-        lat = out["latency_at_sat"]
-        t_r = sim_sat
+    if sim_res is not None:
+        t_r = sim_res["sim_saturation"]
+        lat = sim_res["latency_at_sat"]
     _, hops, _ = routing.paths_channel_loads(tm)
     w = tm / max(tm.sum(), 1e-12)
     avg_hops = float((hops * w).sum())
     rep = cm.report(topo, t_r, avg_hops, lat)
-    return dict(topology=name, n=n, substrate=substrate, pattern=pattern,
-                area_mm2=area, rel_throughput=rep.rel_throughput,
+    return dict(topology=case.name, n=case.n, substrate=case.substrate,
+                pattern=case.pattern, area_mm2=case.area,
+                rel_throughput=rep.rel_throughput,
                 abs_throughput_gbps=rep.abs_throughput_gbps,
                 latency_ns=rep.avg_latency_ns,
                 chiplet_area_mm2=rep.area_mm2,
                 phy_area_frac=rep.phy_area_fraction,
                 power_w=rep.power_w, max_link_mm=rep.max_link_mm,
-                radix=rep.radix, sim=use_sim)
+                radix=rep.radix, sim=sim_res is not None)
+
+
+def evaluate_many(cells, use_sim: bool = False,
+                  sim_cfg: SimConfig = BENCH_SIM_CFG,
+                  n_rates: int = 6) -> list[dict | None]:
+    """Evaluate many cells; simulated cells run through the batched
+    sweep engine in few compiled programs.  cells: SweepCase or tuples
+    accepted by SweepCase(*cell).  Invalid (N-constraint) cells -> None.
+    """
+    cases = [c if isinstance(c, SweepCase) else SweepCase(*c)
+             for c in cells]
+    sims: list = [None] * len(cases)
+    if use_sim:
+        sims = engine_for(sim_cfg).evaluate_cases(cases, n_rates=n_rates)
+    return [_cell_row(case, sims[i]) if case.valid else None
+            for i, case in enumerate(cases)]
+
+
+def evaluate(name: str, n: int, substrate: str = "organic",
+             pattern: str = "uniform", area: float = 74.0,
+             roles: str = "homogeneous", use_sim: bool = False,
+             sim_cfg: SimConfig = BENCH_SIM_CFG):
+    """Single-cell convenience wrapper over `evaluate_many`."""
+    return evaluate_many(
+        [SweepCase(name, n, substrate, pattern, area, roles)],
+        use_sim=use_sim, sim_cfg=sim_cfg)[0]
 
 
 def write_csv(path: str, rows: list[dict]):

@@ -1,4 +1,8 @@
-"""One benchmark per paper table/figure (see DESIGN.md §7)."""
+"""One benchmark per paper table/figure (see DESIGN.md §7).
+
+Simulated figures (fig4/fig7/fig8 with --sim) collect all their cells
+first and evaluate them through the batched sweep engine, so a whole
+figure compiles a handful of programs instead of one per topology."""
 from __future__ import annotations
 
 import os
@@ -9,8 +13,10 @@ from repro.core import linkmodel as lm
 from repro.core import topology as T
 from repro.core import traffic as TR
 from repro.core.collectives import build_ici_model
+from repro.sweep.engine import SweepCase
 
-from .common import (RESULTS_DIR, SIZES, SIZES_FULL, evaluate, write_csv)
+from .common import (RESULTS_DIR, SIZES, SIZES_FULL, evaluate,
+                     evaluate_many, write_csv)
 
 PRINCIPLED = ["mesh", "folded_torus", "hexamesh", "folded_hexa_torus",
               "octamesh", "folded_octa_torus"]
@@ -32,12 +38,11 @@ def fig2_linkmodel(sizes=None):
 def fig4_principles(sizes=None, use_sim=False):
     """Fig. 4: principled topologies x 3 chiplet sizes, organic."""
     sizes = sizes or SIZES
-    rows = []
-    for area in (37.0, 74.0, 148.0):
-        for name in PRINCIPLED:
-            for n in sizes:
-                rows.append(evaluate(name, n, "organic", "uniform",
-                                     area=area, use_sim=use_sim))
+    cells = [SweepCase(name, n, "organic", "uniform", area)
+             for area in (37.0, 74.0, 148.0)
+             for name in PRINCIPLED
+             for n in sizes]
+    rows = evaluate_many(cells, use_sim=use_sim)
     write_csv(os.path.join(RESULTS_DIR, "fig4.csv"), rows)
     # headline: FHT wins throughput at N=256, 74mm^2
     sub = [r for r in rows
@@ -106,14 +111,13 @@ def table3_properties(sizes=None):
 def fig7_main(sizes=None, use_sim=False):
     """Fig. 7: all topologies x {homo,hetero} x {organic,glass}."""
     sizes = sizes or SIZES
-    rows = []
-    for substrate in ("organic", "glass"):
-        for roles, pattern in (("homogeneous", "uniform"),
-                               ("hetero_cm", "hetero_mix")):
-            for name in ALL_TOPOLOGIES:
-                for n in sizes:
-                    rows.append(evaluate(name, n, substrate, pattern,
-                                         roles=roles, use_sim=use_sim))
+    cells = [SweepCase(name, n, substrate, pattern, 74.0, roles)
+             for substrate in ("organic", "glass")
+             for roles, pattern in (("homogeneous", "uniform"),
+                                    ("hetero_cm", "hetero_mix"))
+             for name in ALL_TOPOLOGIES
+             for n in sizes]
+    rows = evaluate_many(cells, use_sim=use_sim)
     write_csv(os.path.join(RESULTS_DIR, "fig7.csv"), rows)
     ok = [r for r in rows if r]
     best = {}
@@ -129,12 +133,11 @@ def fig7_main(sizes=None, use_sim=False):
 def fig8_patterns(sizes=None, use_sim=False):
     """Fig. 8: permutation / tornado / neighbor on glass, homogeneous."""
     sizes = sizes or SIZES
-    rows = []
-    for pattern in ("permutation", "tornado", "neighbor"):
-        for name in ALL_TOPOLOGIES:
-            for n in sizes:
-                rows.append(evaluate(name, n, "glass", pattern,
-                                     use_sim=use_sim))
+    cells = [SweepCase(name, n, "glass", pattern)
+             for pattern in ("permutation", "tornado", "neighbor")
+             for name in ALL_TOPOLOGIES
+             for n in sizes]
+    rows = evaluate_many(cells, use_sim=use_sim)
     write_csv(os.path.join(RESULTS_DIR, "fig8.csv"), rows)
     return sum(1 for r in rows if r)
 
@@ -149,10 +152,9 @@ def fig10_traces(sizes=None, use_sim=False):
                          "folded_hexa_torus", "kite_medium", "sid_mesh",
                          "double_butterfly", "octamesh"):
                 for n in sizes:
-                    from repro.core.topology import build
-                    from .common import _routing
-                    topo, routing = _routing(name, n, "organic", 74.0,
-                                             "hetero_cmi")
+                    from repro.core.routing import cached_routing
+                    topo, routing = cached_routing(name, n, "organic",
+                                                   74.0, "hetero_cmi")
                     tm, intensity = TR.trace_region_traffic(
                         topo, profile, region)
                     t_r = routing.saturation_rate(tm)
@@ -204,6 +206,16 @@ def roofline_summary(sizes=None):
     return "no dry-run artifacts (run repro.launch.dryrun first)"
 
 
+def sweep_speedup(sizes=None):
+    """Batched-vs-looped simulator sweep wall-clock (DESIGN.md §6/§7)."""
+    from .sweep_bench import bench_speedup
+    out = bench_speedup(smoke=True)
+    return (f"batched {out['batched_cold_s']:.1f}s vs looped "
+            f"{out['looped_cold_s']:.1f}s cold "
+            f"({out['cold_speedup']:.2f}x), bitwise_equal="
+            f"{out['bitwise_equal']}")
+
+
 BENCHES = {
     "fig2_linkmodel": fig2_linkmodel,
     "table3_properties": table3_properties,
@@ -215,4 +227,5 @@ BENCHES = {
     "fig10_traces": fig10_traces,
     "collectives_bridge": collectives_bridge,
     "roofline_summary": roofline_summary,
+    "sweep_speedup": sweep_speedup,
 }

@@ -93,7 +93,9 @@ def _bottleneck_hint(row) -> str:
             "waste; already near the MXU roof")
 
 
-def analyze(dryrun_dir: str, chips_by_mesh=None):
+def analyze(dryrun_dir: str, chips_by_mesh=None, ici_sim: bool = False):
+    """ici_sim=True costs the paper-bridge collectives with simulated
+    (sweep-engine) saturation instead of the analytic bound."""
     from repro.configs import SHAPES, get_config
     from repro.core.collectives import build_ici_model
 
@@ -130,7 +132,7 @@ def analyze(dryrun_dir: str, chips_by_mesh=None):
         )
         # paper bridge: same collective bytes on a 64-chiplet ICI package
         for topo in ("mesh", "folded_hexa_torus"):
-            m = build_ici_model(topo, 64, "organic")
+            m = build_ici_model(topo, 64, "organic", use_sim=ici_sim)
             t = 0.0
             for kind, v in rec.get("collectives", {}).items():
                 kk = kind.replace("-", "_")
@@ -161,8 +163,12 @@ def main(argv=None):
     ap.add_argument("--dir", default=os.path.join(RESULTS_DIR, "dryrun"))
     ap.add_argument("--csv", default=os.path.join(RESULTS_DIR,
                                                   "roofline.csv"))
+    ap.add_argument("--ici-sim", action="store_true",
+                    help="cost the ICI bridge with simulated saturation "
+                         "(batched sweep engine) instead of the analytic "
+                         "bound")
     args = ap.parse_args(argv)
-    rows = analyze(args.dir)
+    rows = analyze(args.dir, ici_sim=args.ici_sim)
     ok = [r for r in rows if r.get("ok")]
     if ok:
         cols = [c for c in ok[0] if c != "hint"]

@@ -1,0 +1,114 @@
+"""Batched-vs-looped sweep wall-clock benchmark (DESIGN.md §6/§7).
+
+    PYTHONPATH=src python -m benchmarks.sweep_bench [--smoke]
+
+Measures the paper's core evaluation loop — K topologies x R injection
+rates through the cycle simulator — two ways:
+
+  * looped:  one compiled program per topology (the seed behaviour),
+  * batched: all topologies padded into ONE compiled program
+             (`run_batch`, DESIGN.md §6).
+
+Cold times include compilation (the dominant cost of the per-topology
+loop); warm times re-run the cached executables.  Results land in
+results/sweep_speedup.csv and the two paths are checked bitwise-equal
+before any number is reported.  --smoke shrinks the grid so the whole
+benchmark finishes well under a minute (the `make bench-smoke` target).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from repro.core import simulator as sim
+from repro.core import traffic as TR
+from repro.core.routing import cached_routing
+from repro.core.simulator import SimConfig, make_spec, run_batch
+
+from .common import RESULTS_DIR, write_csv
+
+SMOKE = dict(names=("mesh", "folded_torus", "hexamesh",
+                    "folded_hexa_torus"),
+             n=16, n_rates=4, cycles=300, warmup=100)
+FULL = dict(names=("mesh", "folded_torus", "hexamesh",
+                   "folded_hexa_torus", "octamesh", "kite_medium"),
+            n=36, n_rates=8, cycles=1500, warmup=500)
+
+
+def _specs_and_rates(params):
+    specs, rate_rows = [], []
+    for name in params["names"]:
+        topo, routing = cached_routing(name, params["n"])
+        tm = TR.PATTERNS["uniform"](topo)
+        specs.append(make_spec(routing, tm))
+        rate_rows.append(sim.saturation_rate_grid(
+            routing.saturation_rate(tm), params["n_rates"]))
+    return specs, np.stack(rate_rows).astype(np.float32)
+
+
+def _fresh_cache():
+    """Clear the compiled-runner cache so cold timings include compile."""
+    sim._RUNNER_CACHE.clear()
+
+
+def bench_speedup(smoke: bool = True) -> dict:
+    params = SMOKE if smoke else FULL
+    cfg = SimConfig(cycles=params["cycles"], warmup=params["warmup"])
+    specs, rates = _specs_and_rates(params)
+    raw_keys = ("delivered", "offered_n", "accepted_n", "lat_sum")
+
+    def looped():
+        return [run_batch([s], rates[i:i + 1], cfg)[0]
+                for i, s in enumerate(specs)]
+
+    def batched():
+        return run_batch(specs, rates, cfg)   # ONE compiled program
+
+    _fresh_cache()
+    t0 = time.time()
+    loop_res = looped()
+    looped_cold = time.time() - t0
+    t0 = time.time()
+    looped()
+    looped_warm = time.time() - t0
+
+    _fresh_cache()
+    t0 = time.time()
+    batch_res = batched()
+    batched_cold = time.time() - t0
+    t0 = time.time()
+    batched()
+    batched_warm = time.time() - t0
+
+    equal = all(np.array_equal(a[k], b[k])
+                for a, b in zip(loop_res, batch_res) for k in raw_keys)
+    out = dict(n_topologies=len(specs), n_rates=params["n_rates"],
+               n=params["n"], cycles=params["cycles"],
+               looped_cold_s=round(looped_cold, 3),
+               looped_warm_s=round(looped_warm, 3),
+               batched_cold_s=round(batched_cold, 3),
+               batched_warm_s=round(batched_warm, 3),
+               cold_speedup=round(looped_cold / max(batched_cold, 1e-9), 2),
+               warm_speedup=round(looped_warm / max(batched_warm, 1e-9), 2),
+               bitwise_equal=equal, mode="smoke" if smoke else "full")
+    write_csv(os.path.join(RESULTS_DIR, "sweep_speedup.csv"), [out])
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid, finishes in well under 60 s")
+    args = ap.parse_args(argv)
+    out = bench_speedup(smoke=args.smoke)
+    for k, v in out.items():
+        print(f"{k}: {v}")
+    if not out["bitwise_equal"]:
+        raise SystemExit("batched results diverged from looped results")
+
+
+if __name__ == "__main__":
+    main()

@@ -57,11 +57,20 @@ class IciModel:
 
 @functools.lru_cache(maxsize=64)
 def build_ici_model(topology: str = "folded_hexa_torus", n: int = 64,
-                    substrate: str = "organic") -> IciModel:
+                    substrate: str = "organic",
+                    use_sim: bool = False) -> IciModel:
+    """use_sim=True derives B_eff from the cycle-accurate simulator via
+    the batched sweep engine instead of the analytic channel-load bound
+    (slower but congestion-aware; see DESIGN.md §6)."""
     topo = build(topology, n, substrate=substrate)
     r = build_routing(topo)
     u = traffic.uniform(topo)
     t_r = r.saturation_rate(u)           # analytic channel-load bound
+    if use_sim:
+        from repro.sweep.engine import SweepCase, default_engine
+        res = default_engine().evaluate_cases(
+            [SweepCase(topology, n, substrate)])[0]
+        t_r = res["sim_saturation"]
     t_a = costmodel.absolute_throughput_gbps(topo, t_r)
     hop_ns = float(lm.ROUTER_LATENCY_NS + 2 * lm.PHY_LATENCY_NS +
                    np.mean(lm.wire_latency_ns(topo.link_lengths_mm(),

@@ -25,12 +25,13 @@ injection rate is  min(1, 1/max_e load_e)  flits/node/cycle.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 import scipy.sparse as sp
 import scipy.sparse.csgraph as csgraph
 
-from .topology import Topology
+from .topology import Topology, build
 from . import linkmodel as lm
 
 
@@ -274,6 +275,21 @@ def _build_routing_rooted(topo: Topology, root: int,
                    out_ch=out_ch, in_ch=in_ch, n_ports=out_counts,
                    table=table, prohibited_turns=n_prohibited,
                    total_turns=n_turns)
+
+
+@functools.lru_cache(maxsize=4096)
+def cached_routing(name: str, n: int, substrate: str = "organic",
+                   area: float = 74.0, roles: str = "homogeneous",
+                   hex_region: bool = False) -> tuple[Topology, Routing]:
+    """Build-and-cache (topology, routing) for one evaluation cell.
+
+    Routing construction (Dijkstra over the dual graph) dominates
+    analytic evaluation time; benchmarks and the sweep engine share this
+    cache so a cell is only ever built once per process.
+    """
+    topo = build(name, n, substrate=substrate, chiplet_area_mm2=area,
+                 roles_scheme=roles, hex_region=hex_region)
+    return topo, build_routing(topo)
 
 
 def dependency_graph_is_acyclic(r: Routing) -> bool:

@@ -1,7 +1,8 @@
 """Cycle-based ICI network simulator, vectorized in JAX (paper §V-B).
 
 BookSim semantics re-expressed as dense array updates so the whole
-simulation `lax.scan`s over cycles and `vmap`s over injection rates:
+simulation `lax.scan`s over cycles, `vmap`s over injection rates, and —
+since the sweep-engine rework — `vmap`s over *topologies* as well:
 
   * input-queued routers, V virtual channels x B-flit buffers per input
     port (paper: 4 x 4),
@@ -19,8 +20,36 @@ state.  Saturation throughput is measured as the plateau of delivered
 throughput over an offered-rate sweep (vmapped), the same quantity BookSim
 reports as relative throughput T_r.
 
-The pure-jnp router allocation (`router_phase`) also serves as the
-reference oracle for the Pallas `netstep` kernel (see repro/kernels).
+Batched execution (DESIGN.md §6)
+--------------------------------
+`run_batch` executes many heterogeneous `SimSpec`s — different node
+counts, port counts, channel counts — in ONE jitted program.  Specs are
+padded to a common shape by `repro.sweep.padding` and the step function is
+written to be *padding-invariant*: a spec simulated inside a padded batch
+produces counters bitwise-equal to the same spec simulated alone.  The
+three ingredients:
+
+  * injection randomness is a counter-based hash of (seed, cycle, node,
+    stream) rather than `jax.random` array draws, whose values depend on
+    the array length and therefore on padding;
+  * every scatter either has provably unique indices, is a pure add of
+    zeros for padded lanes, or routes padded lanes to a *sacrificial*
+    row/slot (extra buffer slot B, extra channel row C) that is never
+    read back — this also fixes a latent seed-code hazard where
+    non-traversing ports default-wrote channel 0's link slot and could
+    clobber a real flit under last-update-wins scatter semantics;
+  * the rotating-priority counter advances modulo the spec's own
+    V*(P_spec+1) and allocation receives it split into (rr % V,
+    rr % PI_spec), which preserves the spec's priority *ordering* under a
+    larger padded port axis.
+
+Latency is accumulated per node in int32 (exact, order-independent) and
+reduced to float in numpy, so no float reduction depends on padding.
+
+The pure-jnp allocation (`router_phase` / `_alloc_jnp`) also serves as
+the reference oracle for the Pallas `netstep` kernel (see repro/kernels);
+`SimConfig.alloc` selects the implementation ("auto" uses the kernel on
+TPU and the jnp path elsewhere).
 """
 from __future__ import annotations
 
@@ -36,6 +65,10 @@ from .routing import Routing
 
 INF = jnp.int32(2 ** 30)
 
+_GOLD = np.uint32(0x9E3779B9)
+_MIX_T = np.uint32(0x85EBCA6B)
+_MIX_N = np.uint32(0xC2B2AE3D)
+
 
 class SimConfig(NamedTuple):
     n_vcs: int = 4
@@ -43,21 +76,22 @@ class SimConfig(NamedTuple):
     cycles: int = 3000
     warmup: int = 1000
     seed: int = 0
+    alloc: str = "auto"     # "auto" | "jnp" | "pallas"
 
 
 class SimState(NamedTuple):
-    buf_dst: jnp.ndarray     # [N, PI, V, B] destination (or -1)
-    buf_t: jnp.ndarray       # [N, PI, V, B] injection cycle
+    buf_dst: jnp.ndarray     # [N, PI, V, B+1] destination (-1 empty; slot B
+    buf_t: jnp.ndarray      # [N, PI, V, B+1]  is a sacrificial write sink)
     head: jnp.ndarray        # [N, PI, V]
     cnt: jnp.ndarray         # [N, PI, V]
     credits: jnp.ndarray     # [N, P, V]
-    link_dst: jnp.ndarray    # [C, D]
-    link_t: jnp.ndarray      # [C, D]
-    link_vc: jnp.ndarray     # [C, D]
-    credit_pipe: jnp.ndarray  # [C, D, V]
+    link_dst: jnp.ndarray    # [C+1, D] (row C is a sacrificial write sink)
+    link_t: jnp.ndarray      # [C+1, D]
+    link_vc: jnp.ndarray     # [C+1, D]
+    credit_pipe: jnp.ndarray  # [C+1, D, V]
     rr: jnp.ndarray          # [] rotating priority
     delivered: jnp.ndarray   # []
-    lat_sum: jnp.ndarray     # [] float32
+    lat_node: jnp.ndarray    # [N] int32 summed ejection latency per node
     offered: jnp.ndarray     # []
     accepted: jnp.ndarray    # []
 
@@ -98,55 +132,71 @@ def make_spec(routing: Routing, traffic: np.ndarray) -> SimSpec:
         ch_depth=depth, traffic_cum=cum, inj_weight=inj_weight)
 
 
-def init_state(spec: SimSpec, cfg: SimConfig) -> SimState:
-    N, P, V, B, C, D = (spec.n, spec.p, cfg.n_vcs, cfg.buf_depth,
-                        spec.c, spec.d)
-    PI = P + 1
-    z = jnp.zeros
-    return SimState(
-        buf_dst=jnp.full((N, PI, V, B), -1, jnp.int32),
-        buf_t=z((N, PI, V, B), jnp.int32),
-        head=z((N, PI, V), jnp.int32),
-        cnt=z((N, PI, V), jnp.int32),
-        credits=jnp.full((N, P, V), B, jnp.int32),
-        link_dst=jnp.full((C, D), -1, jnp.int32),
-        link_t=z((C, D), jnp.int32),
-        link_vc=z((C, D), jnp.int32),
-        credit_pipe=z((C, D, V), jnp.int32),
-        rr=jnp.int32(0),
-        delivered=z((), jnp.int32), lat_sum=z((), jnp.float32),
-        offered=z((), jnp.int32), accepted=z((), jnp.int32),
-    )
+# =====================================================================
+# padding-invariant injection randomness
+# =====================================================================
+
+def _mix32(h):
+    """splitmix-style avalanche on uint32 (wrapping jnp arithmetic)."""
+    h = jnp.asarray(h, jnp.uint32)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x7FEB352D)
+    h = (h ^ (h >> 15)) * jnp.uint32(0x846CA68B)
+    return h ^ (h >> 16)
 
 
-def router_phase(table, out_ch_pad_credits, head_dst, cnt, rr,
-                 n: int, p: int, v: int):
-    """Route + two-phase separable allocation (pure jnp; Pallas oracle).
+def _node_bits(seed: int, t, node_idx, stream: int):
+    """Per-node uint32 depending only on (seed, cycle, node, stream) —
+    bitwise invariant to the node-axis padding, unlike jax.random draws
+    whose threefry counter pairing depends on the array length."""
+    h = _mix32(jnp.uint32(np.uint32(seed)) ^ (jnp.uint32(stream) * _GOLD))
+    h = _mix32(h ^ (jnp.asarray(t, jnp.uint32) * _MIX_T))
+    return _mix32(h ^ (node_idx.astype(jnp.uint32) * _MIX_N))
 
-    table: [N_dst, N, PI]; out_ch_pad_credits: [N, P+1, V] credits with an
-    INF ejection column appended.  Returns (win_mask [N,PI,V],
-    out_req [N,PI] in [0..P] or -1, vc_choice [N,PI], port_wins [N,PI]).
+
+def _bits_to_unit(bits):
+    """uint32 -> float32 in [0, 1) using the top 24 bits (exact)."""
+    return (bits >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+# =====================================================================
+# route lookup + two-phase separable allocation
+# =====================================================================
+
+def _route_lookup(table, cred_pad, head_dst, cnt, n: int, p: int, v: int):
+    """Table lookup + credit check for every (node, in-port, VC) head flit.
+
+    Returns op_slot [N, PI, V] int32 (requested output slot, ejection = P,
+    negative = no request) and eligible [N, PI, V] bool.
     """
-    N, P, V = n, p, v
-    PI = P + 1
-    node_idx = jnp.arange(N)[:, None, None]
+    PI = p + 1
+    node_idx = jnp.arange(n)[:, None, None]
     port_idx = jnp.arange(PI)[None, :, None]
-    vcs = jnp.arange(V)[None, None, :]
+    vcs = jnp.arange(v)[None, None, :]
 
     valid = cnt > 0
     dst = jnp.where(valid, head_dst, 0)
-    op = table[dst, node_idx, port_idx]            # [N, PI, V]
+    op = table[dst, node_idx, port_idx].astype(jnp.int32)  # [N, PI, V]
     op = jnp.where(valid, op, -3)
     is_eject = op == Routing.EJECT
-    op_slot = jnp.where(is_eject, P, op)           # [N, PI, V]
-
-    have_credit = out_ch_pad_credits[
-        node_idx, jnp.clip(op_slot, 0, P), vcs] > 0
+    op_slot = jnp.where(is_eject, p, op)           # [N, PI, V]
+    have_credit = cred_pad[node_idx, jnp.clip(op_slot, 0, p), vcs] > 0
     eligible = valid & (op_slot >= 0) & (have_credit | is_eject)
+    return op_slot, eligible
+
+
+def _alloc_jnp(op_slot, eligible, rr_vc, rr_port):
+    """Two-phase separable allocation (pure jnp; Pallas netstep oracle).
+
+    rr_vc rotates the VC priority (phase a), rr_port the input-port
+    priority (phase b).  Returns (win_mask [N,PI,V], vc_choice [N,PI],
+    out_req [N,PI] in [0..P] or -1).
+    """
+    N, PI, V = op_slot.shape
+    vcs = jnp.arange(V)[None, None, :]
 
     # phase a: each input port picks one eligible VC (rotating priority)
-    vc_score = jnp.where(eligible, (vcs - rr) % V, INF)
-    vc_choice = jnp.argmin(vc_score, axis=2)       # [N, PI]
+    vc_score = jnp.where(eligible, (vcs - rr_vc) % V, INF)
+    vc_choice = jnp.argmin(vc_score, axis=2).astype(jnp.int32)
     port_ok = jnp.min(vc_score, axis=2) < INF
     out_req = jnp.where(
         port_ok,
@@ -154,10 +204,10 @@ def router_phase(table, out_ch_pad_credits, head_dst, cnt, rr,
         -1)                                        # [N, PI]
 
     # phase b: each output slot picks one requesting input port
-    p_score = (jnp.arange(PI)[None, :] - rr) % PI  # [1, PI]
+    p_score = (jnp.arange(PI)[None, :] - rr_port) % PI   # [1, PI]
     req_1h = jax.nn.one_hot(jnp.where(out_req >= 0, out_req, PI),
                             PI + 1, dtype=jnp.bool_)[:, :, :PI]  # [N,PI,PI]
-    scores = jnp.where(req_1h, p_score[:, :, None], INF)  # [N, PI(in), PI(out)]
+    scores = jnp.where(req_1h, p_score[:, :, None], INF)  # [N, in, out]
     win_p = jnp.argmin(scores, axis=1)             # [N, PI(out)]
     win_ok = jnp.min(scores, axis=1) < INF
 
@@ -168,71 +218,120 @@ def router_phase(table, out_ch_pad_credits, head_dst, cnt, rr,
     port_wins = won[:, :PI] & port_ok              # [N, PI]
     win_mask = (jax.nn.one_hot(vc_choice, V, dtype=jnp.bool_)
                 & eligible & port_wins[:, :, None])
-    return win_mask, out_req, vc_choice, port_wins
+    return win_mask, vc_choice, out_req
 
 
-def _build_runner(spec: SimSpec, cfg: SimConfig):
-    """Return a jitted fn rate -> (throughput, latency, offered, accepted)."""
-    N, P, V, B, C, D = (spec.n, spec.p, cfg.n_vcs, cfg.buf_depth,
-                        spec.c, spec.d)
+def _alloc_pallas(op_slot, eligible, rr_vc, rr_port):
+    from repro.kernels.netstep.ops import netstep
+    return netstep(op_slot, eligible, (rr_vc, rr_port))
+
+
+def resolve_alloc(alloc: str) -> str:
+    """Map SimConfig.alloc to a concrete implementation for this backend."""
+    if alloc == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if alloc not in ("jnp", "pallas"):
+        raise ValueError(f"unknown alloc impl {alloc!r}")
+    return alloc
+
+
+def router_phase(table, out_ch_pad_credits, head_dst, cnt, rr,
+                 n: int, p: int, v: int):
+    """Route + allocate with a single rotating counter (legacy signature).
+
+    Kept as the documented oracle entry point; the batched runner calls
+    `_route_lookup` + the selected allocator directly with the counter
+    split per DESIGN.md §6.  Returns (win_mask, out_req, vc_choice,
+    port_wins) like the seed implementation.
+    """
+    op_slot, eligible = _route_lookup(table, out_ch_pad_credits,
+                                      head_dst, cnt, n, p, v)
+    win_mask, vc_choice, out_req = _alloc_jnp(op_slot, eligible, rr, rr)
+    return win_mask, out_req, vc_choice, jnp.any(win_mask, axis=2)
+
+
+# =====================================================================
+# batched runner
+# =====================================================================
+
+def _init_state(nm: int, pm: int, cm: int, dm: int, cfg: SimConfig
+                ) -> SimState:
+    V, B = cfg.n_vcs, cfg.buf_depth
+    PI = pm + 1
+    z = jnp.zeros
+    return SimState(
+        buf_dst=jnp.full((nm, PI, V, B + 1), -1, jnp.int32),
+        buf_t=z((nm, PI, V, B + 1), jnp.int32),
+        head=z((nm, PI, V), jnp.int32),
+        cnt=z((nm, PI, V), jnp.int32),
+        credits=jnp.full((nm, pm, V), B, jnp.int32),
+        link_dst=jnp.full((cm + 1, dm), -1, jnp.int32),
+        link_t=z((cm + 1, dm), jnp.int32),
+        link_vc=z((cm + 1, dm), jnp.int32),
+        credit_pipe=z((cm + 1, dm, V), jnp.int32),
+        rr=jnp.int32(0),
+        delivered=z((), jnp.int32), lat_node=z((nm,), jnp.int32),
+        offered=z((), jnp.int32), accepted=z((), jnp.int32),
+    )
+
+
+def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
+                       cfg: SimConfig, alloc_impl: str):
+    """Jitted (batch_arrays, rates[S, R]) -> raw int counters [S, R, ...].
+
+    batch_arrays is a `repro.sweep.padding.BatchSpec` pytree whose array
+    leaves carry a leading spec axis S; rates carries one row of R
+    injection rates per spec.  All shape parameters are static, so the
+    executable is reused for any batch padded to the same shape.
+    """
+    N, P, V, B, C, D = nm, pm, cfg.n_vcs, cfg.buf_depth, cm, dm
     PI = P + 1
-    table = jnp.asarray(spec.table)
-    out_ch = jnp.asarray(spec.out_ch)
-    in_ch = jnp.asarray(spec.in_ch)
-    ch_dst = jnp.asarray(spec.ch_dst)
-    ch_in_port = jnp.asarray(spec.ch_in_port)
-    ch_src = jnp.asarray(spec.ch_src)
-    ch_out_port = jnp.asarray(spec.ch_out_port)
-    ch_depth = jnp.asarray(spec.ch_depth)
-    traffic_cum = jnp.asarray(spec.traffic_cum)
-    inj_weight = jnp.asarray(spec.inj_weight, jnp.float32)
-    base_key = jax.random.PRNGKey(cfg.seed)
+    alloc_fn = _alloc_pallas if alloc_impl == "pallas" else _alloc_jnp
     nn = jnp.arange(N)[:, None]
     pp = jnp.arange(PI)[None, :]
     node_r = jnp.arange(N)
 
-    def step(state: SimState, t_rate):
+    def step(a, state: SimState, t_rate):
         t, rate = t_rate
         slot = t % D
         measuring = t >= cfg.warmup
+        ch_depth_pad = jnp.concatenate(
+            [a.ch_depth, jnp.ones((1,), jnp.int32)])        # [C+1]
 
         # ---- 1. link deliveries -> input buffers ----------------------
-        arr_dst = state.link_dst[:, slot]            # [C]
+        arr_dst = state.link_dst[:C, slot]           # [C]
         arr_ok = arr_dst >= 0
-        arr_vc = state.link_vc[:, slot]
-        pos = (state.head[ch_dst, ch_in_port, arr_vc] +
-               state.cnt[ch_dst, ch_in_port, arr_vc]) % B
-        buf_dst = state.buf_dst.at[ch_dst, ch_in_port, arr_vc, pos].set(
-            jnp.where(arr_ok, arr_dst,
-                      state.buf_dst[ch_dst, ch_in_port, arr_vc, pos]))
-        buf_t = state.buf_t.at[ch_dst, ch_in_port, arr_vc, pos].set(
-            jnp.where(arr_ok, state.link_t[:, slot],
-                      state.buf_t[ch_dst, ch_in_port, arr_vc, pos]))
-        cnt = state.cnt.at[ch_dst, ch_in_port, arr_vc].add(
+        arr_vc = state.link_vc[:C, slot]
+        pos = (state.head[a.ch_dst, a.ch_in_port, arr_vc] +
+               state.cnt[a.ch_dst, a.ch_in_port, arr_vc]) % B
+        pos_w = jnp.where(arr_ok, pos, B)            # B = sacrificial slot
+        buf_dst = state.buf_dst.at[a.ch_dst, a.ch_in_port, arr_vc,
+                                   pos_w].set(arr_dst)
+        buf_t = state.buf_t.at[a.ch_dst, a.ch_in_port, arr_vc,
+                               pos_w].set(state.link_t[:C, slot])
+        cnt = state.cnt.at[a.ch_dst, a.ch_in_port, arr_vc].add(
             arr_ok.astype(jnp.int32))
         link_dst = state.link_dst.at[:, slot].set(-1)
 
         # ---- 2. credit returns ----------------------------------------
-        credits = state.credits.at[ch_src, ch_out_port].add(
-            state.credit_pipe[:, slot])
+        credits = state.credits.at[a.ch_src, a.ch_out_port].add(
+            state.credit_pipe[:C, slot])
         credit_pipe = state.credit_pipe.at[:, slot].set(0)
 
         # ---- 3. injection ----------------------------------------------
-        key = jax.random.fold_in(base_key, t)
-        k1, k2, k3 = jax.random.split(key, 3)
-        want = jax.random.uniform(k1, (N,)) < rate * inj_weight
-        u = jax.random.uniform(k2, (N,))
-        dsts = jnp.sum(traffic_cum < u[:, None], axis=1).astype(jnp.int32)
-        dsts = jnp.clip(dsts, 0, N - 1)
-        vcs_inj = jax.random.randint(k3, (N,), 0, V)
+        u_inj = _bits_to_unit(_node_bits(cfg.seed, t, node_r, 0))
+        want = u_inj < rate * a.inj_weight
+        u_dst = _bits_to_unit(_node_bits(cfg.seed, t, node_r, 1))
+        dsts = jnp.sum(a.traffic_cum < u_dst[:, None], axis=1)
+        dsts = jnp.clip(dsts, 0, N - 1).astype(jnp.int32)
+        vcs_inj = (_node_bits(cfg.seed, t, node_r, 2) % V).astype(jnp.int32)
         want &= dsts != node_r
         space = cnt[node_r, P, vcs_inj] < B
         do_inj = want & space
         posi = (state.head[node_r, P, vcs_inj] + cnt[node_r, P, vcs_inj]) % B
-        buf_dst = buf_dst.at[node_r, P, vcs_inj, posi].set(
-            jnp.where(do_inj, dsts, buf_dst[node_r, P, vcs_inj, posi]))
-        buf_t = buf_t.at[node_r, P, vcs_inj, posi].set(
-            jnp.where(do_inj, t, buf_t[node_r, P, vcs_inj, posi]))
+        posi_w = jnp.where(do_inj, posi, B)
+        buf_dst = buf_dst.at[node_r, P, vcs_inj, posi_w].set(dsts)
+        buf_t = buf_t.at[node_r, P, vcs_inj, posi_w].set(t)
         cnt = cnt.at[node_r, P, vcs_inj].add(do_inj.astype(jnp.int32))
         m32 = measuring.astype(jnp.int32)
         offered = state.offered + m32 * jnp.sum(want.astype(jnp.int32))
@@ -245,84 +344,149 @@ def _build_runner(spec: SimSpec, cfg: SimConfig):
             buf_t, state.head[..., None], axis=3)[..., 0]
         cred_pad = jnp.concatenate(
             [credits, jnp.full((N, 1, V), INF, jnp.int32)], axis=1)
-        win_mask, out_req, vc_choice, port_wins = router_phase(
-            table, cred_pad, head_dst, cnt, state.rr, N, P, V)
+        op_slot, eligible = _route_lookup(a.table, cred_pad, head_dst,
+                                          cnt, N, P, V)
+        rr_vc = state.rr % V
+        rr_port = state.rr % a.pi
+        win_mask, vc_choice, out_req = alloc_fn(op_slot, eligible,
+                                                rr_vc, rr_port)
+        port_wins = jnp.any(win_mask, axis=2)      # [N, PI]
 
         # ---- 5. winners: pop, move, credit ------------------------------
-        win_any = port_wins                        # [N, PI]
         wvc = vc_choice
         w_dst = head_dst[nn, pp, wvc]
         w_t = head_t[nn, pp, wvc]
         head = (state.head.at[nn, pp, wvc]
-                .add(win_any.astype(jnp.int32))) % B
-        cnt = cnt.at[nn, pp, wvc].add(-win_any.astype(jnp.int32))
+                .add(port_wins.astype(jnp.int32))) % B
+        cnt = cnt.at[nn, pp, wvc].add(-port_wins.astype(jnp.int32))
 
         # upstream credit return for real input ports
-        up_ch = in_ch[nn, jnp.clip(pp, 0, P - 1)]  # [N, PI]
-        has_up = (pp < P) & (up_ch >= 0) & win_any
+        up_ch = a.in_ch[nn, jnp.clip(pp, 0, P - 1)]  # [N, PI]
+        has_up = (pp < P) & (up_ch >= 0) & port_wins
         up_ch_s = jnp.maximum(up_ch, 0)
-        ret_slot = (t + ch_depth[up_ch_s]) % D
+        ret_slot = (t + ch_depth_pad[up_ch_s]) % D
         credit_pipe = credit_pipe.at[up_ch_s, ret_slot, wvc].add(
             has_up.astype(jnp.int32))
 
         # ejection vs traversal
-        eject = win_any & (out_req == P)
-        traverse = win_any & (out_req >= 0) & (out_req < P)
+        eject = port_wins & (out_req == P)
+        traverse = port_wins & (out_req >= 0) & (out_req < P)
         delivered = state.delivered + m32 * jnp.sum(eject.astype(jnp.int32))
-        lat_sum = state.lat_sum + measuring.astype(jnp.float32) * jnp.sum(
-            jnp.where(eject, (t - w_t).astype(jnp.float32), 0.0))
+        lat_node = state.lat_node + m32 * jnp.sum(
+            jnp.where(eject, t - w_t, 0), axis=1)
 
-        out_c = out_ch[nn, jnp.clip(out_req, 0, P - 1)]
-        oc = jnp.where(traverse, out_c, -1).ravel()
-        ok = traverse.ravel()
-        oc_s = jnp.maximum(oc, 0)
-        wslot = (t + ch_depth[oc_s]) % D
-        link_dst = link_dst.at[oc_s, wslot].set(
-            jnp.where(ok, w_dst.ravel(), link_dst[oc_s, wslot]))
-        link_t = state.link_t.at[oc_s, wslot].set(
-            jnp.where(ok, w_t.ravel(), state.link_t[oc_s, wslot]))
-        link_vc = state.link_vc.at[oc_s, wslot].set(
-            jnp.where(ok, wvc.ravel(), state.link_vc[oc_s, wslot]))
+        out_c = a.out_ch[nn, jnp.clip(out_req, 0, P - 1)]
+        oc_w = jnp.where(traverse, out_c, C)       # C = sacrificial row
+        wslot = (t + ch_depth_pad[oc_w]) % D
+        link_dst = link_dst.at[oc_w, wslot].set(w_dst)
+        link_t = state.link_t.at[oc_w, wslot].set(w_t)
+        link_vc = state.link_vc.at[oc_w, wslot].set(wvc)
         credits = credits.at[nn, jnp.clip(out_req, 0, P - 1), wvc].add(
             -traverse.astype(jnp.int32))
 
-        new_state = SimState(
+        return SimState(
             buf_dst=buf_dst, buf_t=buf_t, head=head, cnt=cnt,
             credits=credits, link_dst=link_dst, link_t=link_t,
             link_vc=link_vc, credit_pipe=credit_pipe,
-            rr=(state.rr + 1) % (V * PI),
-            delivered=delivered, lat_sum=lat_sum, offered=offered,
+            rr=(state.rr + 1) % (V * a.pi),
+            delivered=delivered, lat_node=lat_node, offered=offered,
             accepted=accepted)
-        return new_state, None
 
-    def run_one(rate):
-        state = init_state(spec, cfg)
+    def run_one(a, rate):
+        state = _init_state(N, P, C, D, cfg)
         ts = jnp.arange(cfg.cycles)
         rates = jnp.full((cfg.cycles,), rate)
-        state, _ = jax.lax.scan(step, state, (ts, rates))
-        meas = cfg.cycles - cfg.warmup
-        thr = state.delivered / (N * meas)
-        lat = state.lat_sum / jnp.maximum(state.delivered, 1)
-        off = state.offered / (N * meas)
-        acc = state.accepted / (N * meas)
-        return thr, lat, off, acc
+        state, _ = jax.lax.scan(lambda s, tr: (step(a, s, tr), None),
+                                state, (ts, rates))
+        return (state.delivered, state.offered, state.accepted,
+                state.lat_node)
 
-    return jax.jit(jax.vmap(run_one))
+    def runner(batch, rates):
+        per_spec = lambda a, rr_: jax.vmap(lambda r: run_one(a, r))(rr_)
+        return jax.vmap(per_spec)(batch, rates)
 
+    return jax.jit(runner)
+
+
+_RUNNER_CACHE: dict = {}
+
+
+def get_batch_runner(nm: int, pm: int, cm: int, dm: int, cfg: SimConfig,
+                     alloc_impl: str):
+    """Compiled-runner cache keyed on the padded shape + SimConfig; a new
+    topology padded to a known shape reuses the existing executable."""
+    key = (nm, pm, cm, dm, cfg, alloc_impl, jax.default_backend())
+    fn = _RUNNER_CACHE.get(key)
+    if fn is None:
+        fn = _RUNNER_CACHE[key] = _make_batch_runner(
+            nm, pm, cm, dm, cfg, alloc_impl)
+    return fn
+
+
+def runner_cache_info() -> dict:
+    """Executable-cache introspection for the sweep engine's stats:
+    compiled-variant count per full cache key (shape + config + impl)."""
+    return {key: fn._cache_size() for key, fn in _RUNNER_CACHE.items()}
+
+
+def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
+              pad_shape=None) -> list[dict]:
+    """Run many SimSpecs x injection rates in one batched jitted program.
+
+    rates: [R] shared across specs, or [S, R] one row per spec.  Returns
+    one dict per spec with raw integer counters (`delivered`, `offered`,
+    `accepted`, `lat_sum`) plus derived float metrics (`throughput`,
+    `latency`, ...) computed in numpy — so derived values are bitwise
+    reproducible for any padding of the same spec.
+    """
+    from repro.sweep.padding import stack_specs
+    batch, shape = stack_specs(specs, pad_shape)
+    s = len(specs)
+    rates = np.asarray(rates, np.float32)
+    if rates.ndim == 1:
+        rates = np.broadcast_to(rates, (s, rates.shape[0]))
+    if rates.shape[0] != s:
+        raise ValueError(f"rates rows {rates.shape[0]} != specs {s}")
+    runner = get_batch_runner(shape.n, shape.p, shape.c, shape.d, cfg,
+                              resolve_alloc(cfg.alloc))
+    delivered, offered, accepted, lat_node = runner(batch,
+                                                    jnp.asarray(rates))
+    delivered = np.asarray(delivered)          # [S, R]
+    offered = np.asarray(offered)
+    accepted = np.asarray(accepted)
+    lat_sum = np.asarray(lat_node).astype(np.int64).sum(axis=2)  # [S, R]
+    meas = cfg.cycles - cfg.warmup
+    out = []
+    for i, spec in enumerate(specs):
+        norm = spec.n * meas
+        out.append(dict(
+            rate=rates[i].astype(np.float64),
+            delivered=delivered[i], offered_n=offered[i],
+            accepted_n=accepted[i], lat_sum=lat_sum[i],
+            throughput=delivered[i] / norm,
+            latency=lat_sum[i] / np.maximum(delivered[i], 1),
+            offered=offered[i] / norm,
+            accepted=accepted[i] / norm))
+    return out
+
+
+# =====================================================================
+# single-spec conveniences (thin wrappers over the batched path)
+# =====================================================================
 
 def simulate(routing: Routing, traffic: np.ndarray, rates,
              cfg: SimConfig = SimConfig()):
     """Run the simulator for a sweep of injection rates (vmapped).
 
     Returns dict of numpy arrays: delivered throughput (flits/node/cycle),
-    avg packet latency (cycles), offered and accepted rates.
+    avg packet latency (cycles), offered and accepted rates.  This is a
+    batch of one through `run_batch` at the spec's exact shape.
     """
     spec = make_spec(routing, traffic)
-    runner = _build_runner(spec, cfg)
-    thr, lat, off, acc = runner(jnp.asarray(rates, jnp.float32))
-    return dict(rate=np.asarray(rates), throughput=np.asarray(thr),
-                latency=np.asarray(lat), offered=np.asarray(off),
-                accepted=np.asarray(acc))
+    res = run_batch([spec], np.asarray(rates, np.float32)[None, :], cfg)[0]
+    return dict(rate=np.asarray(rates), throughput=res["throughput"],
+                latency=res["latency"], offered=res["offered"],
+                accepted=res["accepted"])
 
 
 def saturation_throughput(routing: Routing, traffic: np.ndarray,
@@ -334,13 +498,18 @@ def saturation_throughput(routing: Routing, traffic: np.ndarray,
     around it.
     """
     analytic = routing.saturation_rate(traffic)
-    hi = min(1.0, 2.0 * analytic)
-    rates = np.linspace(max(analytic * 0.25, 1e-3), hi, n_rates)
+    rates = saturation_rate_grid(analytic, n_rates)
     res = simulate(routing, traffic, rates, cfg)
     i = int(np.argmax(res["throughput"]))
     return dict(sim_saturation=float(res["throughput"][i]),
                 analytic_saturation=float(analytic),
                 latency_at_sat=float(res["latency"][i]), sweep=res)
+
+
+def saturation_rate_grid(analytic: float, n_rates: int = 8) -> np.ndarray:
+    """Offered-rate grid bracketing the analytic saturation estimate."""
+    hi = min(1.0, 2.0 * analytic)
+    return np.linspace(max(analytic * 0.25, 1e-3), hi, n_rates)
 
 
 def zero_load_latency(routing: Routing, traffic: np.ndarray) -> float:

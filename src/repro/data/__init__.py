@@ -1,1 +1,2 @@
+"""Synthetic data pipelines for the framework-side training examples."""
 from .pipeline import SyntheticLMData  # noqa

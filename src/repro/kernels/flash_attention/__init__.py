@@ -1,1 +1,2 @@
+"""Flash-attention Pallas kernel with a pure-jnp reference oracle."""
 from . import ops, ref  # noqa

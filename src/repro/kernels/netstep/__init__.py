@@ -1,1 +1,2 @@
+"""ICI switch-allocation (netstep) Pallas kernel - the simulator hot loop."""
 from . import ops, ref  # noqa

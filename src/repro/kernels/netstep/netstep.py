@@ -29,12 +29,13 @@ def _netstep_kernel(op_slot_ref, eligible_ref, rr_ref, win_ref, vc_ref,
                     req_ref, *, n_out: int):
     op_slot = op_slot_ref[...]                 # [BN, PI, V] int32
     eligible = eligible_ref[...]               # [BN, PI, V] bool
-    rr = rr_ref[0]
+    rr_vc = rr_ref[0]                          # VC-phase rotating counter
+    rr_port = rr_ref[1]                        # port-phase rotating counter
     bn, pi, v = op_slot.shape
 
     # phase a: rotating-priority VC choice per input port
     vcs = jax.lax.broadcasted_iota(jnp.int32, (bn, pi, v), 2)
-    vc_score = jnp.where(eligible, (vcs - rr) % v, INF)
+    vc_score = jnp.where(eligible, (vcs - rr_vc) % v, INF)
     best = jnp.min(vc_score, axis=2)                      # [BN, PI]
     vc_choice = jnp.argmin(vc_score, axis=2).astype(jnp.int32)
     port_ok = best < INF
@@ -45,7 +46,7 @@ def _netstep_kernel(op_slot_ref, eligible_ref, rr_ref, win_ref, vc_ref,
 
     # phase b: each output slot takes the lowest-priority-score requester
     ports = jax.lax.broadcasted_iota(jnp.int32, (bn, pi), 1)
-    p_score = (ports - rr) % pi                           # [BN, PI]
+    p_score = (ports - rr_port) % pi                      # [BN, PI]
     win = jnp.zeros((bn, pi), jnp.bool_)
     for o in range(n_out):                                # static radix
         req_o = out_req == o
@@ -66,8 +67,16 @@ def _netstep_kernel(op_slot_ref, eligible_ref, rr_ref, win_ref, vc_ref,
 def netstep_pallas(op_slot, eligible, rr, *, block: int = 64,
                    interpret: bool = False):
     """op_slot: [N, PI, V] int32 (requested out slot, -1 none);
-    eligible: [N, PI, V] bool; rr: scalar int32.
+    eligible: [N, PI, V] bool; rr: scalar int32 — or an (rr_vc, rr_port)
+    pair to rotate the VC and port phases with different periods, as the
+    batched simulator requires (DESIGN.md §6).
     Returns (win_mask [N,PI,V], vc_choice [N,PI], out_req [N,PI])."""
+    if isinstance(rr, tuple):
+        rr_vc, rr_port = rr
+    else:
+        rr_vc = rr_port = rr
+    rr2 = jnp.stack([jnp.asarray(rr_vc, jnp.int32),
+                     jnp.asarray(rr_port, jnp.int32)])
     n, pi, v = op_slot.shape
     pad = (-n) % block
     if pad:
@@ -82,7 +91,7 @@ def netstep_pallas(op_slot, eligible, rr, *, block: int = 64,
         in_specs=[
             pl.BlockSpec((block, pi, v), lambda i: (i, 0, 0)),
             pl.BlockSpec((block, pi, v), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
         ],
         out_specs=[
             pl.BlockSpec((block, pi, v), lambda i: (i, 0, 0)),
@@ -95,5 +104,5 @@ def netstep_pallas(op_slot, eligible, rr, *, block: int = 64,
             jax.ShapeDtypeStruct((np_, pi), jnp.int32),
         ],
         interpret=interpret,
-    )(op_slot, eligible, jnp.asarray([rr], jnp.int32))
+    )(op_slot, eligible, rr2)
     return win[:n], vc[:n], req[:n]

@@ -1,4 +1,9 @@
-"""Public wrapper for the netstep Pallas kernel."""
+"""Public wrapper for the netstep Pallas kernel.
+
+`netstep` is the allocation hot loop the batched simulator dispatches to
+when `SimConfig.alloc` resolves to "pallas" (auto on TPU).  On CPU the
+kernel runs in interpret mode — correct but slow, so the simulator
+defaults to the pure-jnp oracle there."""
 import jax
 
 from .netstep import netstep_pallas
@@ -6,6 +11,11 @@ from .netstep import netstep_pallas
 
 def _interpret() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def is_available() -> bool:
+    """True when the kernel compiles natively (non-interpreted)."""
+    return jax.default_backend() == "tpu"
 
 
 def netstep(op_slot, eligible, rr, *, block: int = 64):

@@ -1,5 +1,7 @@
 """Oracle for the netstep kernel — mirrors the allocation arithmetic of
-repro.core.simulator.router_phase on pre-computed (op_slot, eligible)."""
+repro.core.simulator on pre-computed (op_slot, eligible).  `rr` is a
+scalar, or an (rr_vc, rr_port) pair rotating the two phases separately
+(the batched simulator's convention, DESIGN.md §6)."""
 import jax
 import jax.numpy as jnp
 
@@ -7,9 +9,13 @@ INF = jnp.int32(2 ** 30)
 
 
 def netstep_ref(op_slot, eligible, rr):
+    if isinstance(rr, tuple):
+        rr_vc, rr_port = rr
+    else:
+        rr_vc = rr_port = rr
     n, pi, v = op_slot.shape
     vcs = jnp.arange(v)[None, None, :]
-    vc_score = jnp.where(eligible, (vcs - rr) % v, INF)
+    vc_score = jnp.where(eligible, (vcs - rr_vc) % v, INF)
     vc_choice = jnp.argmin(vc_score, axis=2).astype(jnp.int32)
     port_ok = jnp.min(vc_score, axis=2) < INF
     sel = jax.nn.one_hot(vc_choice, v, dtype=jnp.bool_)
@@ -17,7 +23,7 @@ def netstep_ref(op_slot, eligible, rr):
                         jnp.take_along_axis(op_slot,
                                             vc_choice[..., None],
                                             axis=2)[..., 0], -1)
-    p_score = (jnp.arange(pi)[None, :] - rr) % pi
+    p_score = (jnp.arange(pi)[None, :] - rr_port) % pi
     win = jnp.zeros((n, pi), jnp.bool_)
     for o in range(pi):
         req_o = out_req == o

@@ -1,1 +1,2 @@
+"""Mamba-2 SSD chunked-scan Pallas kernel with pure-jnp oracles."""
 from . import ops, ref  # noqa

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
 production meshes and extract roofline inputs from the compiled artifact.
 
@@ -12,6 +9,9 @@ bytes and memory_analysis() are *per chip*; collective bytes are summed
 from the post-partitioning HLO (output shapes of all-reduce / all-gather
 / reduce-scatter / all-to-all / collective-permute ops).
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse   # noqa: E402
 import dataclasses  # noqa: E402
 import json       # noqa: E402

@@ -1,2 +1,3 @@
+"""Optimizers and LR schedules (AdamW + warmup-cosine) for the training stack."""
 from .adamw import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm  # noqa
 from .schedule import warmup_cosine  # noqa

@@ -1,1 +1,2 @@
+"""Fault-tolerance runtime helpers: retries, watchdogs, elastic batching."""
 from .fault import retry, StepWatchdog, Heartbeat, elastic_batch  # noqa

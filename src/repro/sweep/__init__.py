@@ -1,0 +1,16 @@
+"""Batched multi-topology sweep engine (DESIGN.md §6).
+
+Pads heterogeneous `SimSpec`s to a common shape and runs many
+topologies x injection rates through one jitted program, with a
+compiled-executable cache keyed on the padded shape so adding a topology
+to a sweep reuses the existing executable.
+
+    from repro.sweep import SweepEngine
+    eng = SweepEngine()
+    rows = eng.sweep(["mesh", "hexamesh", "folded_hexa_torus"], n=16)
+"""
+from .engine import SweepCase, SweepEngine, default_engine
+from .padding import BatchSpec, PadShape, pad_spec, stack_specs
+
+__all__ = ["SweepCase", "SweepEngine", "default_engine", "BatchSpec",
+           "PadShape", "pad_spec", "stack_specs"]

@@ -1,0 +1,203 @@
+"""Batched multi-topology sweep engine (DESIGN.md §6).
+
+`SweepEngine` turns "evaluate K topologies x R injection rates" from a
+per-topology recompile loop into a handful of batched compiled programs:
+
+  1. specs are grouped by *bucketed* padded shape (dims rounded up to
+     configurable multiples, batch size rounded up by replicating the
+     last spec, rate rows rounded up by repeating the last rate), so
+  2. adding one more topology or rate to a sweep usually re-runs the
+     SAME executable (`repro.core.simulator.get_batch_runner` caches per
+     padded shape; jit caches per batch shape), and
+  3. padding invariance (see `repro.sweep.padding`) guarantees results
+     are bitwise-equal to the single-spec `simulate` path.
+
+The engine also offers case-level evaluation (`evaluate_cases`) used by
+`benchmarks/`: it builds routing + traffic per (topology, N, substrate,
+pattern) cell, seeds a per-cell rate grid from the analytic channel-load
+bound, and reports simulated saturation like
+`simulator.saturation_throughput` — but for all cells at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+from repro.core import simulator as sim
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.routing import cached_routing
+from repro.core.simulator import SimConfig, SimSpec, make_spec
+
+from .padding import PadShape
+
+
+class SweepCase(NamedTuple):
+    """One (topology, size, substrate, traffic) evaluation cell."""
+    name: str
+    n: int
+    substrate: str = "organic"
+    pattern: str = "uniform"
+    area: float = 74.0
+    roles: str = "homogeneous"
+
+    def build(self) -> tuple:
+        """(routing, traffic matrix) for this cell, via the shared cache."""
+        topo, routing = cached_routing(self.name, self.n, self.substrate,
+                                       self.area, self.roles)
+        return routing, TR.PATTERNS[self.pattern](topo)
+
+    @property
+    def valid(self) -> bool:
+        return not (self.name in T.N_CONSTRAINTS
+                    and not T.N_CONSTRAINTS[self.name](self.n))
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m if m > 1 else x
+
+
+@dataclasses.dataclass
+class SweepEngine:
+    """Padded-batch sweep runner with a compiled-executable cache.
+
+    bucket=False disables shape rounding (every distinct max-shape gets
+    its own executable); the default buckets favour executable reuse when
+    topologies are added incrementally.
+    """
+    cfg: SimConfig = SimConfig()
+    bucket: bool = True
+    s_round: int = 4         # batch axis rounded up to a multiple of this
+    r_round: int = 4         # rate axis rounded up to a multiple of this
+    n_mult: int = 8          # node-dim bucket
+    c_mult: int = 32         # channel-dim bucket
+    d_mult: int = 4          # link-ring bucket
+
+    def __post_init__(self):
+        self.stats = dict(runs=0, groups=0, specs=0, compiles=0, reuses=0)
+
+    # ---- shape policy --------------------------------------------------
+    def bucket_shape(self, shape: PadShape) -> PadShape:
+        if not self.bucket:
+            return shape
+        return PadShape(n=_round_up(shape.n, self.n_mult),
+                        p=shape.p,
+                        c=_round_up(shape.c, self.c_mult),
+                        d=_round_up(shape.d, self.d_mult))
+
+    # ---- core entry point ----------------------------------------------
+    def run_specs(self, specs: Sequence[SimSpec], rates,
+                  single_program: bool = False) -> list[dict]:
+        """Run heterogeneous specs through few batched programs.
+
+        rates: [R] shared or [S, R] per-spec.  Returns one result dict
+        per spec (same keys as `simulator.run_batch`), in input order.
+        single_program=True pads every spec to one global shape so the
+        whole sweep is exactly one compiled program (at the cost of
+        padding small-radix topologies to the largest radix present).
+        """
+        s = len(specs)
+        rates = np.asarray(rates, np.float32)
+        if rates.ndim == 1:
+            rates = np.broadcast_to(rates, (s, rates.shape[0])).copy()
+        n_rates = rates.shape[1]
+        r_pad = _round_up(n_rates, self.r_round) if self.bucket else n_rates
+
+        groups: dict[PadShape, list[int]] = {}
+        if single_program:
+            groups[self.bucket_shape(PadShape.of(specs))] = list(range(s))
+        else:
+            for i, spec in enumerate(specs):
+                key = self.bucket_shape(
+                    PadShape(n=spec.n, p=spec.p, c=spec.c, d=spec.d))
+                groups.setdefault(key, []).append(i)
+
+        before = sum(sim.runner_cache_info().values())
+        results: list = [None] * s
+        for shape, idxs in groups.items():
+            g_specs = [specs[i] for i in idxs]
+            g_rates = rates[idxs]
+            if r_pad > n_rates:
+                g_rates = np.concatenate(
+                    [g_rates,
+                     np.repeat(g_rates[:, -1:], r_pad - n_rates, axis=1)],
+                    axis=1)
+            s_pad = _round_up(len(g_specs), self.s_round) \
+                if self.bucket else len(g_specs)
+            while len(g_specs) < s_pad:           # replicate an inert tail
+                g_specs.append(g_specs[-1])
+                g_rates = np.concatenate([g_rates, g_rates[-1:]], axis=0)
+            out = sim.run_batch(g_specs, g_rates, self.cfg,
+                                pad_shape=shape)
+            for j, i in enumerate(idxs):
+                results[i] = {k: (v[:n_rates] if isinstance(v, np.ndarray)
+                                  else v)
+                              for k, v in out[j].items()}
+        after = sum(sim.runner_cache_info().values())
+        self.stats["runs"] += 1
+        self.stats["groups"] += len(groups)
+        self.stats["specs"] += s
+        self.stats["compiles"] += after - before
+        self.stats["reuses"] += max(len(groups) - (after - before), 0)
+        return results
+
+    # ---- case-level convenience ----------------------------------------
+    def evaluate_cases(self, cases: Sequence[SweepCase],
+                       n_rates: int = 6) -> list[dict | None]:
+        """Simulated saturation for many cells in few batched programs.
+
+        Per cell: rate grid seeded by the analytic channel-load bound,
+        then `sim_saturation` = max delivered throughput over the grid
+        (exactly what `saturation_throughput` reports per spec).
+        Invalid cells (N-constraint) yield None.
+        """
+        live = [(i, c) for i, c in enumerate(cases) if c.valid]
+        specs, rate_rows, analytic = [], [], []
+        for _, case in live:
+            routing, tm = case.build()
+            a = routing.saturation_rate(tm)
+            specs.append(make_spec(routing, tm))
+            rate_rows.append(sim.saturation_rate_grid(a, n_rates))
+            analytic.append(a)
+        out: list = [None] * len(cases)
+        if not specs:
+            return out
+        results = self.run_specs(specs, np.stack(rate_rows))
+        for (i, case), res, a in zip(live, results, analytic):
+            k = int(np.argmax(res["throughput"]))
+            out[i] = dict(case=case,
+                          sim_saturation=float(res["throughput"][k]),
+                          analytic_saturation=float(a),
+                          latency_at_sat=float(res["latency"][k]),
+                          sweep=res)
+        return out
+
+    def sweep(self, names: Sequence[str], n: int, substrate: str = "organic",
+              pattern: str = "uniform", area: float = 74.0,
+              roles: str = "homogeneous", n_rates: int = 6) -> list[dict]:
+        """Evaluate several topologies at one size in one batched sweep."""
+        cases = [SweepCase(name, n, substrate, pattern, area, roles)
+                 for name in names]
+        rows = []
+        for case, res in zip(cases, self.evaluate_cases(cases, n_rates)):
+            if res is None:
+                continue
+            rows.append(dict(topology=case.name, n=case.n,
+                             substrate=case.substrate, pattern=case.pattern,
+                             sim_saturation=res["sim_saturation"],
+                             analytic_saturation=res["analytic_saturation"],
+                             latency_at_sat=res["latency_at_sat"]))
+        return rows
+
+
+_DEFAULT: SweepEngine | None = None
+
+
+def default_engine() -> SweepEngine:
+    """Process-wide engine so benchmarks share one executable cache."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = SweepEngine()
+    return _DEFAULT
