@@ -2,7 +2,7 @@
 # the targets work without `pip install -e .`.
 PY := PYTHONPATH=src python
 
-.PHONY: test bench bench-smoke bench-sim examples
+.PHONY: test bench bench-smoke bench-sim bench-workloads examples
 
 test:                 ## tier-1 verify
 	$(PY) -m pytest -x -q
@@ -15,6 +15,9 @@ bench-sim:            ## all paper figures, cycle-accurate simulator
 
 bench-smoke:          ## tiny batched-vs-looped sweep, < 60 s, bitwise-checked
 	$(PY) -m benchmarks.sweep_bench --smoke
+
+bench-workloads:      ## workload grid (topologies x substrates x workloads)
+	$(PY) -m benchmarks.workload_bench   # -> results/workload_sweep.csv
 
 examples:             ## quickstart example
 	$(PY) examples/quickstart.py

@@ -80,6 +80,92 @@ def build_ici_model(topology: str = "folded_hexa_torus", n: int = 64,
                     hop_latency_ns=hop_ns)
 
 
+# =====================================================================
+# collective -> flow-matrix mapping onto chiplet placements (DESIGN.md §9)
+# =====================================================================
+
+def raster_order(topo: Topology) -> np.ndarray:
+    """Chiplet ids in row-major physical order (y-major, x-fastest) —
+    the canonical chiplet <-> mesh-coordinate assignment."""
+    return np.lexsort((topo.pos[:, 0], topo.pos[:, 1]))
+
+
+def mesh_coords(topo: Topology, mesh_shape: dict) -> dict[str, np.ndarray]:
+    """Per-axis mesh coordinate of every chiplet.
+
+    Chiplets are assigned mesh coordinates row-major over the raster
+    order with the LAST mesh axis fastest — so for {"data": D, "model":
+    T} the model groups are physically contiguous runs of T chiplets
+    along x, the placement a real deployment would choose for its
+    highest-traffic axis.
+    """
+    n = topo.n
+    sizes = [int(s) for s in mesh_shape.values()]
+    if int(np.prod(sizes)) != n:
+        raise ValueError(f"mesh {mesh_shape} has {np.prod(sizes)} slots "
+                         f"for {n} chiplets")
+    rank = np.empty(n, dtype=np.int64)
+    rank[raster_order(topo)] = np.arange(n)
+    coords, rem = {}, rank
+    for name, size in reversed(list(mesh_shape.items())):
+        coords[name] = rem % size
+        rem = rem // size
+    return coords
+
+
+def mesh_axis_groups(topo: Topology, mesh_shape: dict, axis: str
+                     ) -> list[list[int]]:
+    """Communication groups of one mesh axis: chiplets that share every
+    *other* axis coordinate, ordered by their own coordinate along
+    `axis` (= the ring order used for ring collectives)."""
+    coords = mesh_coords(topo, mesh_shape)
+    if axis not in coords:
+        raise KeyError(f"axis {axis!r} not in mesh {list(mesh_shape)}")
+    others = [coords[a] for a in mesh_shape if a != axis]
+    key = np.zeros(topo.n, dtype=np.int64)
+    for o in others:
+        key = key * (int(o.max()) + 1) + o
+    groups: dict[int, list[int]] = {}
+    for node in np.argsort(coords[axis] + key * topo.n, kind="stable"):
+        groups.setdefault(int(key[node]), []).append(int(node))
+    return list(groups.values())
+
+
+# flow factor: bytes each member sends to its ring successor (ring
+# schedules, Chan et al.) or to each peer (all-to-all), per payload byte
+_RING_FACTOR = {"all_reduce": lambda k: 2.0 * (k - 1) / k,
+                "all_gather": lambda k: (k - 1) / k,
+                "reduce_scatter": lambda k: (k - 1) / k,
+                "collective_permute": lambda k: 1.0}
+
+
+def collective_flow(n: int, kind: str, groups, bytes_per_chip: float
+                    ) -> np.ndarray:
+    """[N, N] byte-flow matrix of one collective over chiplet groups.
+
+    Ring collectives put their whole payload on the group's ring edges
+    (successor in group order); all-to-all spreads it over every pair.
+    """
+    m = np.zeros((n, n))
+    for g in groups:
+        k = len(g)
+        if k < 2:
+            continue
+        if kind == "all_to_all":
+            share = bytes_per_chip / k
+            for i in g:
+                for j in g:
+                    if i != j:
+                        m[i, j] += share
+        elif kind in _RING_FACTOR:
+            share = bytes_per_chip * _RING_FACTOR[kind](k)
+            for idx, i in enumerate(g):
+                m[i, g[(idx + 1) % k]] += share
+        else:
+            raise KeyError(f"unknown collective kind {kind!r}")
+    return m
+
+
 def compare_topologies(bytes_per_chip: float, kind: str = "all_reduce",
                        n: int = 64, substrate: str = "organic",
                        names=("mesh", "hexamesh", "folded_torus",

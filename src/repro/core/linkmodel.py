@@ -103,10 +103,11 @@ def hop_latency_cycles(length_mm, substrate: str, cycle_ns: float = 1.0):
     router (L_r) + tx PHY (L_p) + wire + rx PHY (L_p); the wire latency is
     rounded up to a full cycle as in the paper.
     """
-    wire = np.ceil(wire_latency_ns(length_mm, substrate) / cycle_ns)
-    fixed = (ROUTER_LATENCY_NS + 2.0 * PHY_LATENCY_NS) / cycle_ns
-    return (fixed + wire).astype(np.int64) if hasattr(wire, "astype") \
-        else int(fixed + wire)
+    wire = np.ceil(wire_latency_ns(np.asarray(length_mm), substrate)
+                   / cycle_ns)
+    cycles = (wire + (ROUTER_LATENCY_NS + 2.0 * PHY_LATENCY_NS) / cycle_ns
+              ).astype(np.int64)
+    return int(cycles) if np.ndim(length_mm) == 0 else cycles
 
 
 def bumps_per_chiplet(chiplet_area_mm2: float, substrate: str) -> int:

@@ -94,6 +94,11 @@ class SimState(NamedTuple):
     lat_node: jnp.ndarray    # [N] int32 summed ejection latency per node
     offered: jnp.ndarray     # []
     accepted: jnp.ndarray    # []
+    # per-phase counters (workload mode only; None in static mode)
+    delivered_ph: jnp.ndarray | None = None   # [K]
+    offered_ph: jnp.ndarray | None = None     # [K]
+    accepted_ph: jnp.ndarray | None = None    # [K]
+    lat_ph: jnp.ndarray | None = None         # [K, N] int32
 
 
 @dataclasses.dataclass
@@ -115,21 +120,115 @@ class SimSpec:
     inj_weight: np.ndarray   # [N] relative injection rate per node
 
 
-def make_spec(routing: Routing, traffic: np.ndarray) -> SimSpec:
-    depth = lm.hop_latency_cycles(routing.ch_len_mm, routing.topo.substrate)
-    depth = np.maximum(np.asarray(depth, np.int32), 1)
-    d = int(depth.max()) + 1
+def _traffic_arrays(traffic: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(cumulative rows, injection weights) for one traffic matrix.
+
+    Shared by the static `make_spec` path and the phase-schedule compiler
+    (`make_sched_spec`) so a single-phase schedule reproduces the static
+    arrays bitwise — the workload path is a strict generalization.
+    """
     rows = traffic.sum(axis=1)
     inj_weight = rows / max(rows.max(), 1e-12)
     cum = np.cumsum(traffic, axis=1)
     cum = cum / np.maximum(cum[:, -1:], 1e-12)
     cum[rows <= 0] = 1.0   # inert sources: any draw maps to dst 0, gated off
+    return cum, inj_weight
+
+
+def make_spec(routing: Routing, traffic: np.ndarray) -> SimSpec:
+    depth = lm.hop_latency_cycles(routing.ch_len_mm, routing.topo.substrate)
+    depth = np.maximum(np.asarray(depth, np.int32), 1)
+    d = int(depth.max()) + 1
+    cum, inj_weight = _traffic_arrays(traffic)
     return SimSpec(
         n=routing.topo.n, p=routing.max_ports, c=routing.n_channels, d=d,
         table=routing.table, out_ch=routing.out_ch, in_ch=routing.in_ch,
         ch_dst=routing.ch_dst, ch_in_port=routing.ch_in_port,
         ch_src=routing.ch_src, ch_out_port=routing.ch_out_port,
         ch_depth=depth, traffic_cum=cum, inj_weight=inj_weight)
+
+
+# =====================================================================
+# phase schedules (time-varying workloads, DESIGN.md §9)
+# =====================================================================
+
+@dataclasses.dataclass
+class SchedSpec:
+    """Compiled phase schedule for one spec (numpy, [K, ...] leaves).
+
+    A workload is a sequence of K phases; phase k is active for cycles
+    [start[k], end[k]) of the schedule, which replays cyclically
+    (`t_eff = t % total`).  During a phase, injection draws destinations
+    from that phase's cumulative traffic rows and offers
+    `rate * gain * inj_w[node]` flits/cycle, where the gain is
+    `gain_on[k]` inside the ON window of the phase's ON/OFF burst
+    modulation and 0 inside the OFF window (no modulation: always ON,
+    `gain_on == intensity`).
+    """
+    k: int
+    n: int
+    cum: np.ndarray       # [K, N, N] cumulative traffic rows per phase
+    inj_w: np.ndarray     # [K, N] relative injection weight per phase
+    gain_on: np.ndarray   # [K] float32 rate gain inside the ON window
+    start: np.ndarray     # [K] int32 cumulative phase start (cycles)
+    end: np.ndarray       # [K] int32 cumulative phase end (cycles)
+    on: np.ndarray        # [K] int32 ON window length
+    period: np.ndarray    # [K] int32 ON+OFF period (>= 1)
+    total: int            # schedule length in cycles
+
+
+def make_sched_spec(phases) -> SchedSpec:
+    """Compile (traffic, intensity, duration[, burst_on, burst_off])
+    tuples into a `SchedSpec`.
+
+    intensity scales the offered rate for the whole phase; burst_on/off
+    add ON/OFF modulation *within* the phase: during ON the gain is
+    intensity * period/on, during OFF it is 0, which preserves the
+    phase's mean offered load exactly when the phase duration is a
+    multiple of the period (and to within one partial period's ON
+    surplus otherwise).  burst_on or burst_off <= 0 disables modulation
+    (gain_on == intensity exactly, so an unmodulated unit-intensity
+    phase multiplies the rate by exactly 1.0f).
+    """
+    if not phases:
+        raise ValueError("schedule needs at least one phase")
+    cums, injs, gains, ons, periods, durs = [], [], [], [], [], []
+    n = np.asarray(phases[0][0]).shape[0]
+    for ph in phases:
+        traffic, intensity, duration = ph[0], float(ph[1]), int(ph[2])
+        burst_on = int(ph[3]) if len(ph) > 3 else 0
+        burst_off = int(ph[4]) if len(ph) > 4 else 0
+        traffic = np.asarray(traffic, np.float64)
+        if traffic.shape != (n, n):
+            raise ValueError(f"phase traffic shape {traffic.shape} != "
+                             f"({n}, {n})")
+        if duration < 1:
+            raise ValueError("phase duration must be >= 1 cycle")
+        cum, inj = _traffic_arrays(traffic)
+        cums.append(cum), injs.append(inj), durs.append(duration)
+        if burst_on > 0 and burst_off > 0:
+            ons.append(burst_on)
+            periods.append(burst_on + burst_off)
+            gains.append(intensity * (burst_on + burst_off) / burst_on)
+        else:
+            ons.append(1), periods.append(1)
+            gains.append(intensity)
+    end = np.cumsum(np.asarray(durs, np.int64)).astype(np.int32)
+    start = np.concatenate([[0], end[:-1]]).astype(np.int32)
+    return SchedSpec(
+        k=len(phases), n=n, cum=np.stack(cums), inj_w=np.stack(injs),
+        gain_on=np.asarray(gains, np.float32), start=start, end=end,
+        on=np.asarray(ons, np.int32), period=np.asarray(periods, np.int32),
+        total=int(end[-1]))
+
+
+def phase_measured_cycles(sched: SchedSpec, cfg: SimConfig) -> np.ndarray:
+    """[K] measured (post-warmup) cycles spent in each phase — the
+    normalizer for per-phase throughput.  Mirrors the in-scan phase
+    pointer exactly: t_eff = t % total, phase = #{ends <= t_eff}."""
+    t_eff = np.arange(cfg.warmup, cfg.cycles) % sched.total
+    ph = (sched.end[None, :] <= t_eff[:, None]).sum(axis=1)
+    return np.bincount(ph, minlength=sched.k).astype(np.int64)
 
 
 # =====================================================================
@@ -254,12 +353,17 @@ def router_phase(table, out_ch_pad_credits, head_dst, cnt, rr,
 # batched runner
 # =====================================================================
 
-def _init_state(nm: int, pm: int, cm: int, dm: int, cfg: SimConfig
-                ) -> SimState:
+def _init_state(nm: int, pm: int, cm: int, dm: int, cfg: SimConfig,
+                kmax: int = 0) -> SimState:
     V, B = cfg.n_vcs, cfg.buf_depth
     PI = pm + 1
     z = jnp.zeros
+    ph = dict(delivered_ph=z((kmax,), jnp.int32),
+              offered_ph=z((kmax,), jnp.int32),
+              accepted_ph=z((kmax,), jnp.int32),
+              lat_ph=z((kmax, nm), jnp.int32)) if kmax else {}
     return SimState(
+        **ph,
         buf_dst=jnp.full((nm, PI, V, B + 1), -1, jnp.int32),
         buf_t=z((nm, PI, V, B + 1), jnp.int32),
         head=z((nm, PI, V), jnp.int32),
@@ -276,13 +380,22 @@ def _init_state(nm: int, pm: int, cm: int, dm: int, cfg: SimConfig
 
 
 def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
-                       cfg: SimConfig, alloc_impl: str):
+                       cfg: SimConfig, alloc_impl: str, kmax: int = 0):
     """Jitted (batch_arrays, rates[S, R]) -> raw int counters [S, R, ...].
 
     batch_arrays is a `repro.sweep.padding.BatchSpec` pytree whose array
     leaves carry a leading spec axis S; rates carries one row of R
     injection rates per spec.  All shape parameters are static, so the
     executable is reused for any batch padded to the same shape.
+
+    kmax > 0 builds the *workload* runner: the jitted function takes a
+    third argument, a `repro.sweep.padding.SchedBatch` pytree of phase
+    schedules padded to kmax phases, and injection becomes time-varying
+    (phase pointer advanced inside the scan).  The phase pointer is
+    padding-invariant: it counts phase *ends* <= t_eff, and padded phase
+    rows carry end == 2^30, so they never register for any real cycle.
+    kmax == 0 is the static path, byte-identical to the pre-workload
+    runner.
     """
     N, P, V, B, C, D = nm, pm, cfg.n_vcs, cfg.buf_depth, cm, dm
     PI = P + 1
@@ -291,7 +404,7 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
     pp = jnp.arange(PI)[None, :]
     node_r = jnp.arange(N)
 
-    def step(a, state: SimState, t_rate):
+    def step(a, sch, state: SimState, t_rate):
         t, rate = t_rate
         slot = t % D
         measuring = t >= cfg.warmup
@@ -319,10 +432,21 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
         credit_pipe = state.credit_pipe.at[:, slot].set(0)
 
         # ---- 3. injection ----------------------------------------------
+        if kmax:
+            # phase pointer: replay the schedule cyclically and count the
+            # phase ends already passed (padded rows end at 2^30 — inert)
+            t_eff = t % sch.total
+            ph = jnp.sum((sch.end <= t_eff).astype(jnp.int32))
+            in_on = ((t_eff - sch.start[ph]) % sch.period[ph]) < sch.on[ph]
+            rate_eff = rate * jnp.where(in_on, sch.gain_on[ph],
+                                        jnp.float32(0.0))
+            inj_w, cum = sch.inj_w[ph], sch.cum[ph]
+        else:
+            rate_eff, inj_w, cum = rate, a.inj_weight, a.traffic_cum
         u_inj = _bits_to_unit(_node_bits(cfg.seed, t, node_r, 0))
-        want = u_inj < rate * a.inj_weight
+        want = u_inj < rate_eff * inj_w
         u_dst = _bits_to_unit(_node_bits(cfg.seed, t, node_r, 1))
-        dsts = jnp.sum(a.traffic_cum < u_dst[:, None], axis=1)
+        dsts = jnp.sum(cum < u_dst[:, None], axis=1)
         dsts = jnp.clip(dsts, 0, N - 1).astype(jnp.int32)
         vcs_inj = (_node_bits(cfg.seed, t, node_r, 2) % V).astype(jnp.int32)
         want &= dsts != node_r
@@ -371,9 +495,19 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
         # ejection vs traversal
         eject = port_wins & (out_req == P)
         traverse = port_wins & (out_req >= 0) & (out_req < P)
-        delivered = state.delivered + m32 * jnp.sum(eject.astype(jnp.int32))
-        lat_node = state.lat_node + m32 * jnp.sum(
-            jnp.where(eject, t - w_t, 0), axis=1)
+        ej32 = jnp.sum(eject.astype(jnp.int32))
+        lat_row = jnp.sum(jnp.where(eject, t - w_t, 0), axis=1)
+        delivered = state.delivered + m32 * ej32
+        lat_node = state.lat_node + m32 * lat_row
+        ph_upd = {}
+        if kmax:
+            ph_upd = dict(
+                delivered_ph=state.delivered_ph.at[ph].add(m32 * ej32),
+                offered_ph=state.offered_ph.at[ph].add(
+                    m32 * jnp.sum(want.astype(jnp.int32))),
+                accepted_ph=state.accepted_ph.at[ph].add(
+                    m32 * jnp.sum(do_inj.astype(jnp.int32))),
+                lat_ph=state.lat_ph.at[ph].add(m32 * lat_row))
 
         out_c = a.out_ch[nn, jnp.clip(out_req, 0, P - 1)]
         oc_w = jnp.where(traverse, out_c, C)       # C = sacrificial row
@@ -390,20 +524,31 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
             link_vc=link_vc, credit_pipe=credit_pipe,
             rr=(state.rr + 1) % (V * a.pi),
             delivered=delivered, lat_node=lat_node, offered=offered,
-            accepted=accepted)
+            accepted=accepted, **ph_upd)
 
-    def run_one(a, rate):
-        state = _init_state(N, P, C, D, cfg)
+    def run_one(a, sch, rate):
+        state = _init_state(N, P, C, D, cfg, kmax)
         ts = jnp.arange(cfg.cycles)
         rates = jnp.full((cfg.cycles,), rate)
-        state, _ = jax.lax.scan(lambda s, tr: (step(a, s, tr), None),
+        state, _ = jax.lax.scan(lambda s, tr: (step(a, sch, s, tr), None),
                                 state, (ts, rates))
-        return (state.delivered, state.offered, state.accepted,
-                state.lat_node)
+        out = (state.delivered, state.offered, state.accepted,
+               state.lat_node)
+        if kmax:
+            out += (state.delivered_ph, state.offered_ph,
+                    state.accepted_ph, state.lat_ph)
+        return out
 
-    def runner(batch, rates):
-        per_spec = lambda a, rr_: jax.vmap(lambda r: run_one(a, r))(rr_)
-        return jax.vmap(per_spec)(batch, rates)
+    if kmax:
+        def runner(batch, rates, sched):
+            per_spec = lambda a, sch, rr_: jax.vmap(
+                lambda r: run_one(a, sch, r))(rr_)
+            return jax.vmap(per_spec)(batch, sched, rates)
+    else:
+        def runner(batch, rates):
+            per_spec = lambda a, rr_: jax.vmap(
+                lambda r: run_one(a, None, r))(rr_)
+            return jax.vmap(per_spec)(batch, rates)
 
     return jax.jit(runner)
 
@@ -412,14 +557,15 @@ _RUNNER_CACHE: dict = {}
 
 
 def get_batch_runner(nm: int, pm: int, cm: int, dm: int, cfg: SimConfig,
-                     alloc_impl: str):
+                     alloc_impl: str, kmax: int = 0):
     """Compiled-runner cache keyed on the padded shape + SimConfig; a new
-    topology padded to a known shape reuses the existing executable."""
-    key = (nm, pm, cm, dm, cfg, alloc_impl, jax.default_backend())
+    topology padded to a known shape reuses the existing executable.
+    kmax > 0 selects the workload (phase-schedule) runner variant."""
+    key = (nm, pm, cm, dm, cfg, alloc_impl, kmax, jax.default_backend())
     fn = _RUNNER_CACHE.get(key)
     if fn is None:
         fn = _RUNNER_CACHE[key] = _make_batch_runner(
-            nm, pm, cm, dm, cfg, alloc_impl)
+            nm, pm, cm, dm, cfg, alloc_impl, kmax)
     return fn
 
 
@@ -430,7 +576,7 @@ def runner_cache_info() -> dict:
 
 
 def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
-              pad_shape=None) -> list[dict]:
+              pad_shape=None, schedules=None, k_pad=None) -> list[dict]:
     """Run many SimSpecs x injection rates in one batched jitted program.
 
     rates: [R] shared across specs, or [S, R] one row per spec.  Returns
@@ -438,8 +584,16 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
     `accepted`, `lat_sum`) plus derived float metrics (`throughput`,
     `latency`, ...) computed in numpy — so derived values are bitwise
     reproducible for any padding of the same spec.
+
+    schedules: optional list of `SchedSpec` (one per spec) switching the
+    batch to time-varying workload injection (DESIGN.md §9).  Each spec's
+    `traffic_cum`/`inj_weight` are then ignored in favour of its
+    schedule's per-phase arrays, and result dicts gain per-phase counters
+    (`delivered_ph` [R, K], `lat_sum_ph`, `throughput_ph`, `latency_ph`,
+    `phase_cycles` [K]).  k_pad pads the phase axis (executable reuse
+    across workloads with different phase counts).
     """
-    from repro.sweep.padding import stack_specs
+    from repro.sweep.padding import stack_schedules, stack_specs
     batch, shape = stack_specs(specs, pad_shape)
     s = len(specs)
     rates = np.asarray(rates, np.float32)
@@ -447,26 +601,53 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
         rates = np.broadcast_to(rates, (s, rates.shape[0]))
     if rates.shape[0] != s:
         raise ValueError(f"rates rows {rates.shape[0]} != specs {s}")
-    runner = get_batch_runner(shape.n, shape.p, shape.c, shape.d, cfg,
-                              resolve_alloc(cfg.alloc))
-    delivered, offered, accepted, lat_node = runner(batch,
-                                                    jnp.asarray(rates))
-    delivered = np.asarray(delivered)          # [S, R]
-    offered = np.asarray(offered)
-    accepted = np.asarray(accepted)
-    lat_sum = np.asarray(lat_node).astype(np.int64).sum(axis=2)  # [S, R]
+    if schedules is None:
+        runner = get_batch_runner(shape.n, shape.p, shape.c, shape.d, cfg,
+                                  resolve_alloc(cfg.alloc))
+        raw = runner(batch, jnp.asarray(rates))
+    else:
+        if len(schedules) != s:
+            raise ValueError(f"schedules {len(schedules)} != specs {s}")
+        for spec, sched in zip(specs, schedules):
+            if sched.n != spec.n:
+                raise ValueError(f"schedule for {sched.n} nodes paired "
+                                 f"with a {spec.n}-node spec")
+        sbatch, kmax = stack_schedules(schedules, shape.n, k_pad)
+        runner = get_batch_runner(shape.n, shape.p, shape.c, shape.d, cfg,
+                                  resolve_alloc(cfg.alloc), kmax)
+        raw = runner(batch, jnp.asarray(rates), sbatch)
+    delivered = np.asarray(raw[0])             # [S, R]
+    offered = np.asarray(raw[1])
+    accepted = np.asarray(raw[2])
+    lat_sum = np.asarray(raw[3]).astype(np.int64).sum(axis=2)  # [S, R]
     meas = cfg.cycles - cfg.warmup
     out = []
     for i, spec in enumerate(specs):
         norm = spec.n * meas
-        out.append(dict(
+        res = dict(
             rate=rates[i].astype(np.float64),
             delivered=delivered[i], offered_n=offered[i],
             accepted_n=accepted[i], lat_sum=lat_sum[i],
             throughput=delivered[i] / norm,
             latency=lat_sum[i] / np.maximum(delivered[i], 1),
             offered=offered[i] / norm,
-            accepted=accepted[i] / norm))
+            accepted=accepted[i] / norm)
+        if schedules is not None:
+            sched = schedules[i]
+            k = sched.k
+            dp = np.asarray(raw[4])[i, :, :k]              # [R, K]
+            op = np.asarray(raw[5])[i, :, :k]
+            ap = np.asarray(raw[6])[i, :, :k]
+            lp = np.asarray(raw[7])[i, :, :k].astype(np.int64).sum(axis=2)
+            ph_cy = phase_measured_cycles(sched, cfg)      # [K]
+            ph_norm = np.maximum(spec.n * ph_cy, 1)[None, :]
+            res.update(
+                delivered_ph=dp, offered_ph=op, accepted_ph=ap,
+                lat_sum_ph=lp, phase_cycles=ph_cy,
+                throughput_ph=dp / ph_norm,
+                latency_ph=lp / np.maximum(dp, 1),
+                offered_rate_ph=op / ph_norm)
+        out.append(res)
     return out
 
 

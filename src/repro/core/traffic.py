@@ -26,15 +26,31 @@ def uniform(topo: Topology) -> np.ndarray:
 
 
 def random_permutation(topo: Topology, seed: int = 0) -> np.ndarray:
-    """Each source sends all traffic to one random distinct destination."""
+    """Each source sends all traffic to one random distinct destination.
+
+    The mapping is a proper *derangement*: rejection-sample a uniform
+    one, falling back to a cyclic shift of a random order (always
+    fixed-point-free) if none of the draws lands.  The seed code instead
+    patched fixed points with pairwise swaps — a repair whose swap
+    partner `j` can itself end up mapped back to `i`, reintroducing a
+    fixed point that `_normalize` then silently turns into an inert
+    all-zero source row (regression: tests/test_traffic_properties.py
+    seed sweep).
+    """
     n = topo.n
+    if n < 2:
+        return np.zeros((n, n))
     rng = np.random.default_rng(seed)
-    perm = rng.permutation(n)
-    # avoid fixed points
-    for i in range(n):
-        if perm[i] == i:
-            j = (i + 1) % n
-            perm[i], perm[j] = perm[j], perm[i]
+    for _ in range(8):
+        perm = rng.permutation(n)
+        if not np.any(perm == np.arange(n)):
+            break
+    else:
+        # cyclic-shift fallback: order[i] -> order[i+1] is a single
+        # n-cycle, hence a derangement for any n >= 2
+        order = rng.permutation(n)
+        perm = np.empty(n, dtype=np.int64)
+        perm[order] = np.roll(order, -1)
     m = np.zeros((n, n))
     m[np.arange(n), perm] = 1.0
     return _normalize(m)
@@ -132,11 +148,16 @@ TRACE_PROFILES = {
 }
 
 
+def region_traffic(topo: Topology, mem_frac: float) -> np.ndarray:
+    """Traffic matrix of one trace region: coherence flows blended with a
+    memory mix of the region's intensity (shared by the legacy
+    `trace_region_traffic` and `repro.workloads.traces`)."""
+    base = coherence_cmi(topo)
+    mix = hetero_mix(topo, frac_mem=mem_frac)
+    return _normalize(0.5 * base + 0.5 * mix)
+
+
 def trace_region_traffic(topo: Topology, profile: str, region: int):
     """Return (traffic matrix, relative intensity) for one trace region."""
     intensity, mem_frac = TRACE_PROFILES[profile][region]
-    base = coherence_cmi(topo)
-    mix = hetero_mix(topo, frac_mem=mem_frac)
-    # blend coherence flows with the region's memory intensity
-    m = _normalize(0.5 * base + 0.5 * mix)
-    return m, intensity
+    return region_traffic(topo, mem_frac), intensity

@@ -8,9 +8,15 @@ to a sweep reuses the existing executable.
     from repro.sweep import SweepEngine
     eng = SweepEngine()
     rows = eng.sweep(["mesh", "hexamesh", "folded_hexa_torus"], n=16)
+
+Workload mode (DESIGN.md §9) batches (topology, phase-schedule) pairs
+the same way: `eng.run_workloads(specs, schedules, rates)` /
+`eng.evaluate_workload_cases(cases, workloads)`.
 """
 from .engine import SweepCase, SweepEngine, default_engine
-from .padding import BatchSpec, PadShape, pad_spec, stack_specs
+from .padding import (BatchSpec, PadShape, SchedBatch, pad_schedule,
+                      pad_spec, stack_schedules, stack_specs)
 
 __all__ = ["SweepCase", "SweepEngine", "default_engine", "BatchSpec",
-           "PadShape", "pad_spec", "stack_specs"]
+           "PadShape", "pad_spec", "stack_specs", "SchedBatch",
+           "pad_schedule", "stack_schedules"]

@@ -74,6 +74,7 @@ class SweepEngine:
     n_mult: int = 8          # node-dim bucket
     c_mult: int = 32         # channel-dim bucket
     d_mult: int = 4          # link-ring bucket
+    k_round: int = 2         # phase axis (workload mode) bucket
 
     def __post_init__(self):
         self.stats = dict(runs=0, groups=0, specs=0, compiles=0, reuses=0)
@@ -87,7 +88,7 @@ class SweepEngine:
                         c=_round_up(shape.c, self.c_mult),
                         d=_round_up(shape.d, self.d_mult))
 
-    # ---- core entry point ----------------------------------------------
+    # ---- core entry points ---------------------------------------------
     def run_specs(self, specs: Sequence[SimSpec], rates,
                   single_program: bool = False) -> list[dict]:
         """Run heterogeneous specs through few batched programs.
@@ -98,6 +99,29 @@ class SweepEngine:
         whole sweep is exactly one compiled program (at the cost of
         padding small-radix topologies to the largest radix present).
         """
+        return self._run_grouped(specs, rates, None, single_program)
+
+    def run_workloads(self, specs: Sequence[SimSpec], schedules, rates,
+                      single_program: bool = False) -> list[dict]:
+        """Run (spec, phase-schedule) pairs through few batched programs.
+
+        schedules: one `simulator.SchedSpec` (or compilable
+        `workloads.Schedule`) per spec.  Groups also bucket the phase
+        axis (`k_round`) so workloads with similar phase counts share
+        executables.  Result dicts gain the per-phase counters of
+        `run_batch(..., schedules=...)`.
+        """
+        if len(schedules) != len(specs):
+            raise ValueError(
+                f"schedules {len(schedules)} != specs {len(specs)}")
+        schedules = [s.compile() if hasattr(s, "compile") else s
+                     for s in schedules]
+        return self._run_grouped(specs, rates, schedules, single_program)
+
+    # keys whose leading axis is NOT the rate grid (never trimmed)
+    _PER_PHASE_KEYS = ("phase_cycles",)
+
+    def _run_grouped(self, specs, rates, schedules, single_program):
         s = len(specs)
         rates = np.asarray(rates, np.float32)
         if rates.ndim == 1:
@@ -105,19 +129,30 @@ class SweepEngine:
         n_rates = rates.shape[1]
         r_pad = _round_up(n_rates, self.r_round) if self.bucket else n_rates
 
-        groups: dict[PadShape, list[int]] = {}
+        def k_bucket(i: int) -> int:
+            if schedules is None:
+                return 0
+            k = schedules[i].k
+            return _round_up(k, self.k_round) if self.bucket else k
+
+        groups: dict[tuple[PadShape, int], list[int]] = {}
         if single_program:
-            groups[self.bucket_shape(PadShape.of(specs))] = list(range(s))
+            key = (self.bucket_shape(PadShape.of(specs)),
+                   max(k_bucket(i) for i in range(s)))
+            groups[key] = list(range(s))
         else:
             for i, spec in enumerate(specs):
-                key = self.bucket_shape(
-                    PadShape(n=spec.n, p=spec.p, c=spec.c, d=spec.d))
+                key = (self.bucket_shape(
+                    PadShape(n=spec.n, p=spec.p, c=spec.c, d=spec.d)),
+                    k_bucket(i))
                 groups.setdefault(key, []).append(i)
 
         before = sum(sim.runner_cache_info().values())
         results: list = [None] * s
-        for shape, idxs in groups.items():
+        for (shape, k_pad), idxs in groups.items():
             g_specs = [specs[i] for i in idxs]
+            g_scheds = [schedules[i] for i in idxs] \
+                if schedules is not None else None
             g_rates = rates[idxs]
             if r_pad > n_rates:
                 g_rates = np.concatenate(
@@ -129,12 +164,16 @@ class SweepEngine:
             while len(g_specs) < s_pad:           # replicate an inert tail
                 g_specs.append(g_specs[-1])
                 g_rates = np.concatenate([g_rates, g_rates[-1:]], axis=0)
+                if g_scheds is not None:
+                    g_scheds.append(g_scheds[-1])
             out = sim.run_batch(g_specs, g_rates, self.cfg,
-                                pad_shape=shape)
+                                pad_shape=shape, schedules=g_scheds,
+                                k_pad=k_pad or None)
             for j, i in enumerate(idxs):
-                results[i] = {k: (v[:n_rates] if isinstance(v, np.ndarray)
-                                  else v)
-                              for k, v in out[j].items()}
+                results[i] = {
+                    k: (v[:n_rates] if isinstance(v, np.ndarray)
+                        and k not in self._PER_PHASE_KEYS else v)
+                    for k, v in out[j].items()}
         after = sum(sim.runner_cache_info().values())
         self.stats["runs"] += 1
         self.stats["groups"] += len(groups)
@@ -173,6 +212,61 @@ class SweepEngine:
                           latency_at_sat=float(res["latency"][k]),
                           sweep=res)
         return out
+
+    def evaluate_workload_cases(self, cases: Sequence[SweepCase],
+                                workloads: Sequence, n_rates: int = 5,
+                                fit: bool = True) -> list[dict | None]:
+        """Cross topologies x workloads in few batched programs.
+
+        workloads: `repro.workloads.Workload`s (or any callable
+        `topo -> Schedule`).  Returns len(cases) * len(workloads) rows in
+        case-major order; invalid cases yield None rows.  Per row:
+        saturation over the rate grid (seeded from the workload's mean
+        traffic) plus the per-phase breakdown at the saturating rate.
+
+        fit=True (default) rescales each schedule so one full replay
+        covers exactly the measurement window (cycles - warmup) — every
+        phase is measured for exactly its share of the window.
+        """
+        grid: list = [None] * (len(cases) * len(workloads))
+        specs, scheds, rate_rows, live = [], [], [], []
+        meas = self.cfg.cycles - self.cfg.warmup
+        for ci, case in enumerate(cases):
+            if not case.valid:
+                continue
+            topo, routing = cached_routing(case.name, case.n,
+                                           case.substrate, case.area,
+                                           case.roles)
+            for wi, wl in enumerate(workloads):
+                schedule = wl.build(topo) if hasattr(wl, "build") \
+                    else wl(topo)
+                if fit:
+                    schedule = schedule.fit(meas)
+                mean = schedule.mean_traffic()
+                analytic = routing.saturation_rate(mean)
+                specs.append(make_spec(routing, mean))
+                scheds.append(schedule)
+                rate_rows.append(sim.saturation_rate_grid(analytic,
+                                                          n_rates))
+                live.append((ci * len(workloads) + wi, case, schedule,
+                             analytic))
+        if not specs:
+            return grid
+        results = self.run_workloads(specs, scheds, np.stack(rate_rows))
+        for (slot, case, schedule, analytic), res in zip(live, results):
+            k = int(np.argmax(res["throughput"]))
+            grid[slot] = dict(
+                case=case, workload=schedule.name,
+                sim_saturation=float(res["throughput"][k]),
+                analytic_saturation=float(analytic),
+                latency_at_sat=float(res["latency"][k]),
+                phase_labels=[p.label or str(i) for i, p in
+                              enumerate(schedule.phases)],
+                throughput_ph=res["throughput_ph"][k],
+                latency_ph=res["latency_ph"][k],
+                offered_rate_ph=res["offered_rate_ph"][k],
+                phase_cycles=res["phase_cycles"], sweep=res)
+        return grid
 
     def sweep(self, names: Sequence[str], n: int, substrate: str = "organic",
               pattern: str = "uniform", area: float = 74.0,

@@ -183,3 +183,22 @@ def test_generator_invariants(n, name):
     roles = pl.assign_roles(t.pos, "hetero_cm")
     assert set(np.unique(roles)) <= {"C", "M"}
     assert (roles == "M").sum() > 0
+
+
+def test_hop_latency_cycles_scalar_and_array_agree():
+    """Satellite: hop_latency_cycles must accept both call shapes and
+    give a python int for scalars that matches the array path."""
+    lengths = [0.0, 5.0, 17.5, 24.7, 37.2, 69.9]
+    for sub in ("organic", "glass"):
+        arr = lm.hop_latency_cycles(np.asarray(lengths), sub)
+        assert arr.dtype == np.int64 and arr.shape == (len(lengths),)
+        for x, want in zip(lengths, arr):
+            got = lm.hop_latency_cycles(x, sub)
+            assert isinstance(got, int) and not isinstance(got, np.integer)
+            assert got == int(want)
+    # 0-d arrays count as scalars too
+    assert isinstance(lm.hop_latency_cycles(np.float64(20.0), "organic"),
+                      int)
+    # longer wire -> never fewer cycles
+    arr = lm.hop_latency_cycles(np.linspace(0, 70, 141), "organic")
+    assert (np.diff(arr) >= 0).all()

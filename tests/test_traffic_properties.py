@@ -1,0 +1,83 @@
+"""Traffic-pattern property tests (satellites of the workload PR).
+
+Every `PATTERNS` entry must return a matrix whose rows are destination
+distributions — summing to exactly 1 (active source) or 0 (inert
+source) — with a zero diagonal and no negative entries, for grid,
+brick-wall, and hex-spiral placements on both substrates.  Plus the
+`random_permutation` derangement regression: a seed sweep must never
+produce a fixed point (the seed code's pairwise-swap repair could)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+from repro.core import traffic as TR
+
+# (generator name, hex_region) triples covering the three placement
+# families: rectangular grid, brick-wall, hex spiral
+PLACEMENTS = [("mesh", False), ("folded_hexa_torus", False),
+              ("folded_hexa_torus", True)]
+
+
+def _build(placement, n, substrate):
+    name, hex_region = placement
+    return T.build(name, n, substrate=substrate,
+                   roles_scheme="hetero_cmi", hex_region=hex_region)
+
+
+@given(pattern=st.sampled_from(sorted(TR.PATTERNS)),
+       placement=st.sampled_from(PLACEMENTS),
+       substrate=st.sampled_from(["organic", "glass"]),
+       n=st.sampled_from([12, 16, 24, 36]))
+@settings(max_examples=60, deadline=None)
+def test_patterns_rows_are_distributions(pattern, placement, substrate, n):
+    topo = _build(placement, n, substrate)
+    m = TR.PATTERNS[pattern](topo)
+    assert m.shape == (n, n)
+    assert (m >= 0).all()
+    assert np.abs(np.diag(m)).max() == 0.0
+    rows = m.sum(axis=1)
+    active = rows > 0
+    assert np.allclose(rows[active], 1.0, atol=1e-12)
+    assert (rows[~active] == 0).all()
+    # at least someone injects
+    assert active.any()
+
+
+@given(n=st.sampled_from([2, 3, 4, 5, 9, 16, 25, 36]),
+       seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=120, deadline=None)
+def test_random_permutation_is_derangement(n, seed):
+    """Seed-sweep regression: no fixed points, hence no silently-inert
+    all-zero rows — every source sends exactly one unit of traffic."""
+    topo = T.build("mesh", n)
+    m = TR.random_permutation(topo, seed=seed)
+    assert np.abs(np.diag(m)).max() == 0.0
+    np.testing.assert_allclose(m.sum(axis=1), 1.0)
+    # one-hot rows onto distinct destinations (a permutation)
+    assert ((m == 0) | (m == 1)).all()
+    np.testing.assert_allclose(m.sum(axis=0), 1.0)
+
+
+def test_random_permutation_cyclic_fallback_path():
+    """The fallback must itself be a derangement for tiny n where
+    rejection sampling is most likely to exhaust its draws."""
+    for n in (2, 3):
+        for seed in range(200):
+            m = TR.random_permutation(T.build("mesh", n), seed=seed)
+            assert np.abs(np.diag(m)).max() == 0.0
+            np.testing.assert_allclose(m.sum(axis=1), 1.0)
+
+
+def test_region_traffic_matches_legacy_trace_regions():
+    """`region_traffic` must reproduce what `trace_region_traffic`
+    (still used by fig10) derives from the same profile entry."""
+    topo = T.build("folded_hexa_torus", 16, roles_scheme="hetero_cmi")
+    for profile in TR.TRACE_PROFILES:
+        for region in range(len(TR.TRACE_PROFILES[profile])):
+            want, intensity = TR.trace_region_traffic(topo, profile,
+                                                      region)
+            _, mem_frac = TR.TRACE_PROFILES[profile][region]
+            np.testing.assert_array_equal(
+                want, TR.region_traffic(topo, mem_frac))
+            assert intensity == TR.TRACE_PROFILES[profile][region][0]
