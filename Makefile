@@ -2,7 +2,8 @@
 # the targets work without `pip install -e .`.
 PY := PYTHONPATH=src python
 
-.PHONY: test bench bench-smoke bench-sim bench-workloads examples
+.PHONY: test bench bench-smoke bench-sim bench-workloads \
+        bench-experiments examples
 
 test:                 ## tier-1 verify
 	$(PY) -m pytest -x -q
@@ -19,5 +20,9 @@ bench-smoke:          ## tiny batched-vs-looped sweep, < 60 s, bitwise-checked
 bench-workloads:      ## workload grid (topologies x substrates x workloads)
 	$(PY) -m benchmarks.workload_bench   # -> results/workload_sweep.csv
 
-examples:             ## quickstart example
+bench-experiments:    ## mixed static+workload grid through repro.experiments
+	$(PY) -m benchmarks.experiments_bench   # -> results/experiments_grid.csv
+
+examples:             ## quickstart examples (experiment-API smoke)
 	$(PY) examples/quickstart.py
+	$(PY) examples/workload_quickstart.py

@@ -1,25 +1,24 @@
-"""Shared benchmark helpers: evaluate (topology, N, substrate, traffic)
-cells analytically (channel-load bound + zero-load latency) or with the
-cycle-accurate simulator.
+"""Shared benchmark helpers, now a thin layer over `repro.experiments`.
 
-Simulated evaluation goes through the batched sweep engine
-(`repro.sweep.SweepEngine`, DESIGN.md §6): all cells of a figure are
-padded into a handful of compiled programs instead of recompiling the
-simulator per topology — the speedup is recorded by
-`benchmarks/sweep_bench.py` in results/sweep_speedup.csv.
+The figure benches describe their grids as `Experiment`s of `Scenario`s
+and run them through the declarative pipeline (DESIGN.md §10); this
+module keeps the shared constants (sizes, the bench SimConfig), the
+tidy-row -> legacy-row mapping, and the deprecated `evaluate_many` /
+`evaluate` shims for code still written against the PR 1 API.
+
+CSV output goes through `repro.experiments.io` (stable column order +
+`schema_version` stamp) — `write_csv` forwards there.
 """
 from __future__ import annotations
 
 import os
 import time
+import warnings
 
-import numpy as np
-
-from repro.core import costmodel as cm
-from repro.core import traffic as TR
-from repro.core.routing import cached_routing
-from repro.core.simulator import SimConfig, zero_load_latency
-from repro.sweep.engine import SweepCase, SweepEngine
+import repro.experiments as X
+from repro.core.simulator import SimConfig
+from repro.experiments import io as xio
+from repro.sweep.engine import SweepCase
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
@@ -29,79 +28,78 @@ SIZES_FULL = [16, 36, 64, 100, 144, 196, 256]
 
 BENCH_SIM_CFG = SimConfig(cycles=2000, warmup=700)
 
-_ENGINES: dict[SimConfig, SweepEngine] = {}
+
+def run_cells(scenarios, use_sim: bool = False,
+              sim_cfg: SimConfig = BENCH_SIM_CFG,
+              name: str = "bench") -> X.ResultFrame:
+    """Run a list of scenarios under the bench config; `use_sim=False`
+    evaluates the analytic channel-load model (no simulation)."""
+    exp = X.Experiment(scenarios, cfg=sim_cfg, name=name,
+                       backend="sim" if use_sim else "analytic")
+    return X.run(exp)
 
 
-def engine_for(cfg: SimConfig = BENCH_SIM_CFG) -> SweepEngine:
-    """One engine per SimConfig so all figures share executables."""
-    if cfg not in _ENGINES:
-        _ENGINES[cfg] = SweepEngine(cfg=cfg)
-    return _ENGINES[cfg]
+def legacy_row(row: dict) -> dict | None:
+    """Map one tidy `ResultFrame` row to the PR 1 bench-row keys."""
+    if row["status"] != "ok":
+        return None
+    return dict(topology=row["topology"], n=row["n"],
+                substrate=row["substrate"], pattern=row["traffic"],
+                area_mm2=row["area_mm2"],
+                rel_throughput=row["rel_throughput"],
+                abs_throughput_gbps=row["abs_throughput_gbps"],
+                latency_ns=row["latency_ns"],
+                chiplet_area_mm2=row["chiplet_area_mm2"],
+                phy_area_frac=row["phy_area_frac"],
+                power_w=row["power_w"], max_link_mm=row["max_link_mm"],
+                radix=row["radix"], sim=row["backend"] == "sim")
 
 
-def _cell_row(case: SweepCase, sim_res: dict | None) -> dict:
-    """Paper §V-B metrics for one cell; sim_res overrides the analytic
-    saturation/latency when the cell was simulated."""
-    topo, routing = cached_routing(case.name, case.n, case.substrate,
-                                   case.area, case.roles)
-    tm = TR.PATTERNS[case.pattern](topo)
-    t_r = routing.saturation_rate(tm)
-    lat = zero_load_latency(routing, tm)
-    if sim_res is not None:
-        t_r = sim_res["sim_saturation"]
-        lat = sim_res["latency_at_sat"]
-    _, hops, _ = routing.paths_channel_loads(tm)
-    w = tm / max(tm.sum(), 1e-12)
-    avg_hops = float((hops * w).sum())
-    rep = cm.report(topo, t_r, avg_hops, lat)
-    return dict(topology=case.name, n=case.n, substrate=case.substrate,
-                pattern=case.pattern, area_mm2=case.area,
-                rel_throughput=rep.rel_throughput,
-                abs_throughput_gbps=rep.abs_throughput_gbps,
-                latency_ns=rep.avg_latency_ns,
-                chiplet_area_mm2=rep.area_mm2,
-                phy_area_frac=rep.phy_area_fraction,
-                power_w=rep.power_w, max_link_mm=rep.max_link_mm,
-                radix=rep.radix, sim=sim_res is not None)
+def _cases_to_scenarios(cells, n_rates: int):
+    cases = [c if isinstance(c, SweepCase) else SweepCase(*c)
+             for c in cells]
+    return [X.scenario_from_case(c, rates=X.SaturationGrid(n_rates))
+            for c in cases]
 
 
 def evaluate_many(cells, use_sim: bool = False,
                   sim_cfg: SimConfig = BENCH_SIM_CFG,
                   n_rates: int = 6) -> list[dict | None]:
-    """Evaluate many cells; simulated cells run through the batched
-    sweep engine in few compiled programs.  cells: SweepCase or tuples
-    accepted by SweepCase(*cell).  Invalid (N-constraint) cells -> None.
-    """
-    cases = [c if isinstance(c, SweepCase) else SweepCase(*c)
-             for c in cells]
-    sims: list = [None] * len(cases)
-    if use_sim:
-        sims = engine_for(sim_cfg).evaluate_cases(cases, n_rates=n_rates)
-    return [_cell_row(case, sims[i]) if case.valid else None
-            for i, case in enumerate(cases)]
+    """DEPRECATED: build an `Experiment` and call
+    `repro.experiments.run` (see README migration table).
+
+    Forwards to the declarative pipeline; returns the legacy row dicts
+    (None for invalid cells)."""
+    warnings.warn(
+        "benchmarks.common.evaluate_many is deprecated; build an "
+        "Experiment of Scenarios and call repro.experiments.run",
+        DeprecationWarning, stacklevel=2)
+    frame = run_cells(_cases_to_scenarios(cells, n_rates),
+                      use_sim=use_sim, sim_cfg=sim_cfg,
+                      name="evaluate_many")
+    return [legacy_row(r) for r in frame.rows]
 
 
 def evaluate(name: str, n: int, substrate: str = "organic",
              pattern: str = "uniform", area: float = 74.0,
              roles: str = "homogeneous", use_sim: bool = False,
              sim_cfg: SimConfig = BENCH_SIM_CFG):
-    """Single-cell convenience wrapper over `evaluate_many`."""
-    return evaluate_many(
-        [SweepCase(name, n, substrate, pattern, area, roles)],
-        use_sim=use_sim, sim_cfg=sim_cfg)[0]
+    """DEPRECATED single-cell wrapper: use `repro.experiments.run` on a
+    one-Scenario Experiment."""
+    warnings.warn(
+        "benchmarks.common.evaluate is deprecated; run a one-Scenario "
+        "Experiment through repro.experiments.run",
+        DeprecationWarning, stacklevel=2)
+    frame = run_cells(
+        [X.Scenario(name, n, substrate, pattern, area, roles)],
+        use_sim=use_sim, sim_cfg=sim_cfg, name="evaluate")
+    return legacy_row(frame.rows[0])
 
 
 def write_csv(path: str, rows: list[dict]):
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    rows = [r for r in rows if r]
-    if not rows:
-        return
-    cols = list(rows[0].keys())
-    with open(path, "w") as f:
-        f.write(",".join(cols) + "\n")
-        for r in rows:
-            f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
-    print(f"[bench] wrote {path} ({len(rows)} rows)")
+    """Forwarder to the shared versioned writer (schema_version column,
+    stable first-seen column order)."""
+    xio.write_csv(path, rows)
 
 
 def timed(fn):

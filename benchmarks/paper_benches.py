@@ -1,26 +1,36 @@
 """One benchmark per paper table/figure (see DESIGN.md §7).
 
-Simulated figures (fig4/fig7/fig8 with --sim) collect all their cells
-first and evaluate them through the batched sweep engine, so a whole
-figure compiles a handful of programs instead of one per topology."""
+Every grid-shaped figure is described as a `repro.experiments`
+Experiment — a list of declarative Scenarios sharing one SimConfig —
+and evaluated through the one `run` front door (DESIGN.md §10):
+analytically by default, with the cycle-accurate simulator under
+--sim.  CSVs are the experiment `ResultFrame`s (tidy rows, stable
+columns, `schema_version` stamped)."""
 from __future__ import annotations
 
 import os
+from functools import partial
 
 import numpy as np
 
+import repro.experiments as X
 from repro.core import linkmodel as lm
 from repro.core import topology as T
 from repro.core import traffic as TR
 from repro.core.collectives import build_ici_model
-from repro.sweep.engine import SweepCase
 
-from .common import (RESULTS_DIR, SIZES, SIZES_FULL, evaluate,
-                     evaluate_many, write_csv)
+from .common import (RESULTS_DIR, SIZES, SIZES_FULL, run_cells,
+                     write_csv)
 
 PRINCIPLED = ["mesh", "folded_torus", "hexamesh", "folded_hexa_torus",
               "octamesh", "folded_octa_torus"]
 ALL_TOPOLOGIES = list(T.GENERATORS)
+
+
+def _figure_frame(scenarios, use_sim, name, csv):
+    frame = run_cells(scenarios, use_sim=use_sim, name=name)
+    frame.to_csv(os.path.join(RESULTS_DIR, csv))
+    return frame
 
 
 def fig2_linkmodel(sizes=None):
@@ -38,29 +48,27 @@ def fig2_linkmodel(sizes=None):
 def fig4_principles(sizes=None, use_sim=False):
     """Fig. 4: principled topologies x 3 chiplet sizes, organic."""
     sizes = sizes or SIZES
-    cells = [SweepCase(name, n, "organic", "uniform", area)
+    scens = [X.Scenario(name, n, "organic", "uniform", area=area)
              for area in (37.0, 74.0, 148.0)
              for name in PRINCIPLED
              for n in sizes]
-    rows = evaluate_many(cells, use_sim=use_sim)
-    write_csv(os.path.join(RESULTS_DIR, "fig4.csv"), rows)
+    frame = _figure_frame(scens, use_sim, "fig4", "fig4.csv")
     # headline: FHT wins throughput at N=256, 74mm^2
-    sub = [r for r in rows
-           if r and r["n"] == max(sizes) and r["area_mm2"] == 74.0]
-    best = max(sub, key=lambda r: r["abs_throughput_gbps"])
-    return best["topology"]
+    return frame.best("abs_throughput_gbps", n=max(sizes),
+                      area_mm2=74.0)["topology"]
 
 
 def table1_area(sizes=None):
     """Table I: chiplet area relative to Mesh."""
+    frame = run_cells([X.Scenario(name, 64, "organic", area=area)
+                       for area in (37.0, 74.0, 148.0)
+                       for name in PRINCIPLED], name="table1")
     rows = []
     for area in (37.0, 74.0, 148.0):
-        base = None
-        for name in PRINCIPLED:
-            r = evaluate(name, 64, "organic", area=area)
-            if name == "mesh":
-                base = r["chiplet_area_mm2"]
-            rows.append(dict(topology=name, area_mm2=area,
+        base = frame.select(topology="mesh",
+                            area_mm2=area)[0]["chiplet_area_mm2"]
+        for r in frame.select(area_mm2=area):
+            rows.append(dict(topology=r["topology"], area_mm2=area,
                              chiplet_area_mm2=r["chiplet_area_mm2"],
                              rel_vs_mesh_pct=100 * (
                                  r["chiplet_area_mm2"] / base - 1)))
@@ -73,20 +81,20 @@ def table1_area(sizes=None):
 def table2_power(sizes=None):
     """Table II: power at saturation relative to Mesh (mean over sizes)."""
     sizes = sizes or SIZES
+    frame = run_cells([X.Scenario(name, n, "organic", area=area)
+                       for area in (37.0, 74.0, 148.0)
+                       for name in PRINCIPLED for n in sizes],
+                      name="table2")
     rows = []
     for area in (37.0, 74.0, 148.0):
-        per_topo = {}
         for name in PRINCIPLED:
-            rels = []
-            for n in sizes:
-                r = evaluate(name, n, "organic", area=area)
-                base = evaluate("mesh", n, "organic", area=area)
-                rels.append(100 * (r["power_w"] / base["power_w"] - 1))
-            per_topo[name] = (float(np.mean(rels)), float(np.std(rels)))
-        for name, (mean, std) in per_topo.items():
+            rels = [100 * (r["power_w"] /
+                           frame.select(topology="mesh", n=r["n"],
+                                        area_mm2=area)[0]["power_w"] - 1)
+                    for r in frame.select(topology=name, area_mm2=area)]
             rows.append(dict(topology=name, area_mm2=area,
-                             power_rel_mean_pct=mean,
-                             power_rel_std_pct=std))
+                             power_rel_mean_pct=float(np.mean(rels)),
+                             power_rel_std_pct=float(np.std(rels))))
     write_csv(os.path.join(RESULTS_DIR, "table2.csv"), rows)
     return [r["power_rel_mean_pct"] for r in rows
             if r["topology"] == "folded_hexa_torus"][1]
@@ -111,62 +119,53 @@ def table3_properties(sizes=None):
 def fig7_main(sizes=None, use_sim=False):
     """Fig. 7: all topologies x {homo,hetero} x {organic,glass}."""
     sizes = sizes or SIZES
-    cells = [SweepCase(name, n, substrate, pattern, 74.0, roles)
+    scens = [X.Scenario(name, n, substrate, pattern, roles=roles)
              for substrate in ("organic", "glass")
              for roles, pattern in (("homogeneous", "uniform"),
                                     ("hetero_cm", "hetero_mix"))
              for name in ALL_TOPOLOGIES
              for n in sizes]
-    rows = evaluate_many(cells, use_sim=use_sim)
-    write_csv(os.path.join(RESULTS_DIR, "fig7.csv"), rows)
-    ok = [r for r in rows if r]
+    frame = _figure_frame(scens, use_sim, "fig7", "fig7.csv")
     best = {}
     for n in sizes:
-        sub = [r for r in ok if r["n"] == n and
-               r["substrate"] == "organic" and
-               r["pattern"] == "uniform"]
-        best[n] = max(sub, key=lambda r: r["abs_throughput_gbps"])[
-            "topology"]
+        best[n] = frame.best("abs_throughput_gbps", n=n,
+                             substrate="organic",
+                             traffic="uniform")["topology"]
     return best
 
 
 def fig8_patterns(sizes=None, use_sim=False):
     """Fig. 8: permutation / tornado / neighbor on glass, homogeneous."""
     sizes = sizes or SIZES
-    cells = [SweepCase(name, n, "glass", pattern)
+    scens = [X.Scenario(name, n, "glass", pattern)
              for pattern in ("permutation", "tornado", "neighbor")
              for name in ALL_TOPOLOGIES
              for n in sizes]
-    rows = evaluate_many(cells, use_sim=use_sim)
-    write_csv(os.path.join(RESULTS_DIR, "fig8.csv"), rows)
-    return sum(1 for r in rows if r)
+    frame = _figure_frame(scens, use_sim, "fig8", "fig8.csv")
+    return len(frame.ok())
 
 
 def fig10_traces(sizes=None, use_sim=False):
     """Fig. 10: synthetic Netrace-like traces, C/M/I placement, organic."""
     sizes = sizes or [64, 144]
-    rows = []
+    scens = []
     for profile in ("blackscholes", "fluidanimate"):
         for region in range(5):
+            intensity = TR.TRACE_PROFILES[profile][region][0]
+            tr = X.CustomTraffic(
+                f"{profile}:r{region}",
+                partial(lambda topo, p, r: TR.trace_region_traffic(
+                    topo, p, r)[0], p=profile, r=region))
             for name in ("mesh", "folded_torus", "hexamesh",
                          "folded_hexa_torus", "kite_medium", "sid_mesh",
                          "double_butterfly", "octamesh"):
                 for n in sizes:
-                    from repro.core.routing import cached_routing
-                    topo, routing = cached_routing(name, n, "organic",
-                                                   74.0, "hetero_cmi")
-                    tm, intensity = TR.trace_region_traffic(
-                        topo, profile, region)
-                    t_r = routing.saturation_rate(tm)
-                    from repro.core.simulator import zero_load_latency
-                    lat = zero_load_latency(routing, tm)
-                    rows.append(dict(profile=profile, region=region,
-                                     topology=name, n=n,
-                                     intensity=intensity,
-                                     rel_throughput=t_r,
-                                     latency_ns=lat))
-    write_csv(os.path.join(RESULTS_DIR, "fig10.csv"), rows)
-    return len(rows)
+                    scens.append(X.Scenario(
+                        name, n, "organic", tr, roles="hetero_cmi",
+                        tags=(("profile", profile), ("region", region),
+                              ("intensity", intensity))))
+    frame = _figure_frame(scens, use_sim, "fig10", "fig10.csv")
+    return len(frame.ok())
 
 
 def collectives_bridge(sizes=None):

@@ -171,12 +171,11 @@ def main(argv=None):
     rows = analyze(args.dir, ici_sim=args.ici_sim)
     ok = [r for r in rows if r.get("ok")]
     if ok:
+        from repro.experiments import io as xio
         cols = [c for c in ok[0] if c != "hint"]
-        with open(args.csv, "w") as f:
-            f.write(",".join(cols) + "\n")
-            for r in ok:
-                f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
-        print(f"[roofline] wrote {args.csv} ({len(ok)} cells)")
+        xio.write_csv(args.csv,
+                      [{c: r.get(c) for c in cols} for r in ok],
+                      columns=cols)
     print(to_markdown(rows))
     bad = [r for r in rows if not r.get("ok")]
     for r in bad:

@@ -6,14 +6,17 @@ Measures the paper's core evaluation loop — K topologies x R injection
 rates through the cycle simulator — two ways:
 
   * looped:  one compiled program per topology (the seed behaviour),
-  * batched: all topologies padded into ONE compiled program
-             (`run_batch`, DESIGN.md §6).
+    driven by the primitive `run_batch`;
+  * batched: the same grid described as a declarative `Experiment` and
+    executed through `repro.experiments` (DESIGN.md §10), which lowers
+    it onto a handful of padded `SweepEngine` programs.
 
-Cold times include compilation (the dominant cost of the per-topology
-loop); warm times re-run the cached executables.  Results land in
-results/sweep_speedup.csv and the two paths are checked bitwise-equal
-before any number is reported.  --smoke shrinks the grid so the whole
-benchmark finishes well under a minute (the `make bench-smoke` target).
+The plan (routing, specs, rate grids) is resolved before the clock
+starts for both paths, so cold times isolate compile + run cost.  The
+two paths are checked bitwise-equal, counter for counter, before any
+number is reported.  Results land in results/sweep_speedup.csv
+(schema-stamped).  --smoke shrinks the grid so the whole benchmark
+finishes well under a minute (the `make bench-smoke` target).
 """
 from __future__ import annotations
 
@@ -23,10 +26,9 @@ import time
 
 import numpy as np
 
+import repro.experiments as X
 from repro.core import simulator as sim
-from repro.core import traffic as TR
-from repro.core.routing import cached_routing
-from repro.core.simulator import SimConfig, make_spec, run_batch
+from repro.core.simulator import SimConfig, run_batch
 
 from .common import RESULTS_DIR, write_csv
 
@@ -38,34 +40,39 @@ FULL = dict(names=("mesh", "folded_torus", "hexamesh",
             n=36, n_rates=8, cycles=1500, warmup=500)
 
 
-def _specs_and_rates(params):
-    specs, rate_rows = [], []
-    for name in params["names"]:
-        topo, routing = cached_routing(name, params["n"])
-        tm = TR.PATTERNS["uniform"](topo)
-        specs.append(make_spec(routing, tm))
-        rate_rows.append(sim.saturation_rate_grid(
-            routing.saturation_rate(tm), params["n_rates"]))
-    return specs, np.stack(rate_rows).astype(np.float32)
-
-
 def _fresh_cache():
-    """Clear the compiled-runner cache so cold timings include compile."""
+    """Clear the compiled-runner LRU so cold timings include compile."""
     sim._RUNNER_CACHE.clear()
 
 
 def bench_speedup(smoke: bool = True) -> dict:
     params = SMOKE if smoke else FULL
     cfg = SimConfig(cycles=params["cycles"], warmup=params["warmup"])
-    specs, rates = _specs_and_rates(params)
+    engine = X.engine_for(cfg)
+    exp = X.Experiment(
+        [X.Scenario(name, params["n"],
+                    rates=X.SaturationGrid(params["n_rates"]))
+         for name in params["names"]],
+        cfg=cfg, name="sweep_bench")
+    # resolve routing/specs/rates untimed; single_program mirrors the
+    # seed bench's semantics (the whole grid as ONE compiled program)
+    pl = X.plan(exp, engine, single_program=True)
+    planned = sorted((ps for b in pl.buckets for ps in b.items),
+                     key=lambda ps: ps.index)
     raw_keys = ("delivered", "offered_n", "accepted_n", "lat_sum")
 
     def looped():
-        return [run_batch([s], rates[i:i + 1], cfg)[0]
-                for i, s in enumerate(specs)]
+        out = []
+        for ps in planned:
+            res = run_batch([ps.spec], ps.rates[None, :], cfg)[0]
+            # same per-scenario tidy-row derivation the executor's
+            # ResultFrame performs, so the timings compare like-for-like
+            X.scenario_row(exp, ps, res)
+            out.append(res)
+        return out
 
     def batched():
-        return run_batch(specs, rates, cfg)   # ONE compiled program
+        return X.execute(pl, engine=engine)   # few padded programs
 
     _fresh_cache()
     t0 = time.time()
@@ -77,15 +84,15 @@ def bench_speedup(smoke: bool = True) -> dict:
 
     _fresh_cache()
     t0 = time.time()
-    batch_res = batched()
+    frame = batched()
     batched_cold = time.time() - t0
     t0 = time.time()
     batched()
     batched_warm = time.time() - t0
 
-    equal = all(np.array_equal(a[k], b[k])
-                for a, b in zip(loop_res, batch_res) for k in raw_keys)
-    out = dict(n_topologies=len(specs), n_rates=params["n_rates"],
+    equal = all(np.array_equal(a[k], frame.results[ps.index][k])
+                for a, ps in zip(loop_res, planned) for k in raw_keys)
+    out = dict(n_topologies=len(planned), n_rates=params["n_rates"],
                n=params["n"], cycles=params["cycles"],
                looped_cold_s=round(looped_cold, 3),
                looped_warm_s=round(looped_warm, 3),

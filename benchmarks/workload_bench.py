@@ -12,11 +12,12 @@ three workload families (DESIGN.md §9):
     (`trace_workload("fluidanimate")`),
   * an adversarial tornado<->uniform phase alternation.
 
-All (topology x substrate) x workload cells go through ONE
-`SweepEngine.run_workloads` call per padded-shape group (the engine
-batches the whole grid; `stats` records how many compiled programs it
-took).  Results land in results/workload_sweep.csv, one row per
-(cell, phase) plus an ALL summary row per cell.
+The whole (topology x substrate) x workload grid is ONE declarative
+`Experiment` — workloads ride in the Scenarios' `traffic` field — run
+through `repro.experiments.run` (DESIGN.md §10), which lowers it onto
+batched `SweepEngine` programs (the engine `stats` record how many).
+Results land in results/workload_sweep.csv (schema-stamped), one row
+per (cell, phase) plus an ALL summary row per cell.
 """
 from __future__ import annotations
 
@@ -27,12 +28,10 @@ from functools import partial
 
 import numpy as np
 
+import repro.experiments as X
 import repro.workloads as W
 from repro.configs import get_config
-from repro.core import costmodel as cm
-from repro.core.routing import cached_routing
 from repro.core.simulator import SimConfig
-from repro.sweep.engine import SweepCase, SweepEngine
 
 from .common import RESULTS_DIR, write_csv
 
@@ -45,7 +44,7 @@ DEFAULT = dict(names=("mesh", "folded_torus", "hexamesh",
                n=36, n_rates=5, cycles=1500, warmup=500,
                roles="hetero_cmi")
 # all Table-III topologies (invalid N-constraint cells are skipped by
-# the engine, e.g. cluscross at odd grids)
+# the planner, e.g. cluscross at odd grids)
 FULL = dict(names="ALL", n=64, n_rates=6, cycles=2000, warmup=700,
             roles="hetero_cmi")
 
@@ -63,33 +62,34 @@ def workload_suite(arch: str = "qwen3_1_7b") -> list[W.Workload]:
 
 def bench_workloads(params: dict, arch: str = "qwen3_1_7b") -> list[dict]:
     cfg = SimConfig(cycles=params["cycles"], warmup=params["warmup"])
-    engine = SweepEngine(cfg=cfg)
     names = params["names"]
     if names == "ALL":
         from repro.core import topology as T
         names = tuple(T.GENERATORS)
-    cases = [SweepCase(name, params["n"], substrate, roles=params["roles"])
-             for name in names for substrate in SUBSTRATES]
     workloads = workload_suite(arch)
+    exp = X.Experiment(
+        [X.Scenario(name, params["n"], substrate, traffic=wl,
+                    roles=params["roles"],
+                    rates=X.SaturationGrid(params["n_rates"]))
+         for name in names for substrate in SUBSTRATES
+         for wl in workloads],
+        cfg=cfg, name="workload_sweep")
+    engine = X.engine_for(cfg)
     t0 = time.time()
-    grid = engine.evaluate_workload_cases(cases, workloads,
-                                          n_rates=params["n_rates"])
+    frame = X.run(exp, engine=engine)
     wall = time.time() - t0
     rows = []
-    for res in grid:
-        if res is None:
+    for i, row in enumerate(frame.rows):
+        if row["status"] != "ok":
             continue
-        case = res["case"]
+        res = frame.workload_result(i)
         # relative saturation is substrate-blind at these link lengths;
         # the substrate story is the absolute rate the wires sustain
-        topo, _ = cached_routing(case.name, case.n, case.substrate,
-                                 case.area, case.roles)
-        abs_gbps = cm.absolute_throughput_gbps(topo,
-                                               res["sim_saturation"])
-        base = dict(topology=case.name, n=case.n,
-                    substrate=case.substrate, workload=res["workload"],
+        base = dict(topology=row["topology"], n=row["n"],
+                    substrate=row["substrate"], workload=res["workload"],
                     sim_saturation=round(res["sim_saturation"], 4),
-                    abs_throughput_gbps=round(abs_gbps, 1),
+                    abs_throughput_gbps=round(row["abs_throughput_gbps"],
+                                              1),
                     analytic_saturation=round(res["analytic_saturation"],
                                               4),
                     latency_at_sat=round(res["latency_at_sat"], 2))
@@ -104,7 +104,8 @@ def bench_workloads(params: dict, arch: str = "qwen3_1_7b") -> list[dict]:
                 throughput=round(float(res["throughput_ph"][k]), 4),
                 latency=round(float(res["latency_ph"][k]), 2)))
     write_csv(os.path.join(RESULTS_DIR, "workload_sweep.csv"), rows)
-    print(f"[workload_bench] {len(cases)} cells x {len(workloads)} "
+    n_cells = len(names) * len(SUBSTRATES)
+    print(f"[workload_bench] {n_cells} cells x {len(workloads)} "
           f"workloads in {wall:.1f}s; engine stats: {engine.stats}")
     _print_headline(rows)
     return rows

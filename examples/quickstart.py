@@ -1,40 +1,50 @@
-"""Quickstart: build FoldedHexaTorus, route it, simulate it, cost it.
+"""Quickstart: build FoldedHexaTorus, route it, then evaluate a whole
+topology grid through the declarative experiment API (DESIGN.md §10).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
+import os
 
-from repro.core import topology as T, traffic as TR, costmodel as cm
+import repro.experiments as X
+from repro.core import topology as T, traffic as TR
 from repro.core.routing import build_routing, dependency_graph_is_acyclic
-from repro.core.simulator import SimConfig, saturation_throughput, \
-    zero_load_latency
+from repro.core.simulator import SimConfig
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
 def main():
-    print("=== FoldedHexaTorus vs Mesh, 64 chiplets, organic substrate ===")
-    for name in ("mesh", "hexamesh", "folded_torus", "folded_hexa_torus"):
-        topo = T.build(name, 64, substrate="organic")
-        routing = build_routing(topo)
-        assert dependency_graph_is_acyclic(routing)
-        u = TR.uniform(topo)
-        t_r = routing.saturation_rate(u)
-        lat = zero_load_latency(routing, u)
-        _, hops, _ = routing.paths_channel_loads(u)
-        t_a = cm.absolute_throughput_gbps(topo, t_r)
-        print(f"{name:20s} diam={topo.diameter:2d} radix={topo.radix} "
-              f"maxlink={topo.max_link_length_mm():5.1f}mm "
-              f"T_r={t_r:.3f} flits/node/cyc  T_a={t_a/1e3:7.2f} Tb/s "
-              f"lat={lat:5.1f}ns")
-
-    print("\n=== cycle-accurate check (16 chiplets) ===")
-    topo = T.build("folded_hexa_torus", 16)
+    print("=== the core layer: one topology, routed and checked ===")
+    topo = T.build("folded_hexa_torus", 64, substrate="organic")
     routing = build_routing(topo)
-    out = saturation_throughput(routing, TR.uniform(topo),
-                                SimConfig(cycles=1500, warmup=500),
-                                n_rates=5)
-    print(f"simulated saturation {out['sim_saturation']:.3f} "
-          f"(analytic bound {out['analytic_saturation']:.3f}), "
-          f"latency@sat {out['latency_at_sat']:.1f} cycles")
+    assert dependency_graph_is_acyclic(routing)
+    u = TR.uniform(topo)
+    print(f"folded_hexa_torus    diam={topo.diameter:2d} "
+          f"radix={topo.radix} "
+          f"maxlink={topo.max_link_length_mm():5.1f}mm "
+          f"analytic T_r={routing.saturation_rate(u):.3f}")
+
+    print("\n=== the experiment API: a grid through one front door ===")
+    exp = X.Experiment.grid(
+        topologies=["mesh", "hexamesh", "folded_torus",
+                    "folded_hexa_torus"],
+        sizes=[64], name="quickstart", backend="analytic")
+    frame = X.run(exp)
+    for r in frame.ok():
+        print(f"{r['topology']:20s} T_r={r['rel_throughput']:.3f} "
+              f"flits/node/cyc  T_a={r['abs_throughput_gbps']/1e3:7.2f} "
+              f"Tb/s  lat={r['latency_ns']:5.1f}ns")
+    frame.to_csv(os.path.join(RESULTS, "quickstart.csv"))
+
+    print("\n=== cycle-accurate check (16 chiplets, simulated) ===")
+    sim_exp = X.Experiment(
+        [X.Scenario("folded_hexa_torus", 16,
+                    rates=X.SaturationGrid(5))],
+        cfg=SimConfig(cycles=1500, warmup=500), name="quickstart_sim")
+    res = X.run(sim_exp).case_result(0)
+    print(f"simulated saturation {res['sim_saturation']:.3f} "
+          f"(analytic bound {res['analytic_saturation']:.3f}), "
+          f"latency@sat {res['latency_at_sat']:.1f} cycles")
 
 
 if __name__ == "__main__":

@@ -1,21 +1,24 @@
-"""Workload-engine quickstart: time-varying traffic through the sweep.
+"""Workload-engine quickstart: time-varying traffic through the
+declarative experiment API (DESIGN.md §9 + §10).
 
     PYTHONPATH=src python examples/workload_quickstart.py
 
 Builds three workloads — a qwen3-style LLM-training collective
 schedule, a replayed fluidanimate trace with ON/OFF bursts, and an
-adversarial tornado<->uniform alternation — and evaluates Mesh vs
-FoldedHexaTorus under all of them in one batched engine call
-(DESIGN.md §9).
+adversarial tornado<->uniform alternation — crosses them with Mesh vs
+FoldedHexaTorus in ONE `Experiment`, and runs the grid through
+`repro.experiments.run` (the workloads ride in each Scenario's
+`traffic` field; the planner lowers them onto batched engine programs).
 """
+import os
 from functools import partial
 
 import numpy as np
 
+import repro.experiments as X
 import repro.workloads as W
 from repro.configs import get_config
 from repro.core.simulator import SimConfig
-from repro.sweep.engine import SweepCase, SweepEngine
 
 
 def main():
@@ -27,17 +30,25 @@ def main():
                    partial(W.trace_workload, trace="fluidanimate")),
         W.Workload("alt:tornado-uniform", W.phase_alternating),
     ]
-    cases = [SweepCase(name, 16, roles="hetero_cmi")
-             for name in ("mesh", "folded_hexa_torus")]
-    engine = SweepEngine(cfg=SimConfig(cycles=800, warmup=300))
-    print("=== workloads x topologies, one batched sweep ===")
-    for res in engine.evaluate_workload_cases(cases, workloads, n_rates=4):
+    exp = X.Experiment(
+        [X.Scenario(name, 16, traffic=wl, roles="hetero_cmi",
+                    rates=X.SaturationGrid(4))
+         for name in ("mesh", "folded_hexa_torus") for wl in workloads],
+        cfg=SimConfig(cycles=800, warmup=300), name="workload_quickstart")
+    frame = X.run(exp)
+    print("=== workloads x topologies, one declarative experiment ===")
+    for i, row in enumerate(frame.rows):
+        if row["status"] != "ok":
+            continue
+        res = frame.workload_result(i)
         phases = ", ".join(
             f"{lbl}={thr:.3f}" for lbl, thr in
             zip(res["phase_labels"], res["throughput_ph"]))
-        print(f"{res['case'].name:18s} {res['workload']:24s} "
+        print(f"{row['topology']:18s} {res['workload']:24s} "
               f"sat={res['sim_saturation']:.3f} "
               f"lat={res['latency_at_sat']:5.1f}cy  per-phase [{phases}]")
+    frame.to_csv(os.path.join(os.path.dirname(__file__), "..",
+                              "results", "workload_quickstart.csv"))
 
     print("\n=== anatomy of the collective schedule on FHT-16 ===")
     from repro.core.topology import build

@@ -67,10 +67,10 @@ def build_ici_model(topology: str = "folded_hexa_torus", n: int = 64,
     u = traffic.uniform(topo)
     t_r = r.saturation_rate(u)           # analytic channel-load bound
     if use_sim:
-        from repro.sweep.engine import SweepCase, default_engine
-        res = default_engine().evaluate_cases(
-            [SweepCase(topology, n, substrate)])[0]
-        t_r = res["sim_saturation"]
+        from repro import experiments as X
+        frame = X.run(X.Experiment(
+            [X.Scenario(topology, n, substrate)], name="ici_model"))
+        t_r = frame.case_result(0)["sim_saturation"]
     t_a = costmodel.absolute_throughput_gbps(topo, t_r)
     hop_ns = float(lm.ROUTER_LATENCY_NS + 2 * lm.PHY_LATENCY_NS +
                    np.mean(lm.wire_latency_ns(topo.link_lengths_mm(),

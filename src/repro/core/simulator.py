@@ -54,6 +54,8 @@ TPU and the jnp path elsewhere).
 from __future__ import annotations
 
 import dataclasses
+import os
+from collections import OrderedDict
 from typing import NamedTuple
 
 import jax
@@ -553,26 +555,59 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
     return jax.jit(runner)
 
 
-_RUNNER_CACHE: dict = {}
+_RUNNER_CACHE: OrderedDict = OrderedDict()
+_RUNNER_CACHE_MAX = max(
+    int(os.environ.get("REPRO_RUNNER_CACHE_MAX", "64")), 1)
+_RUNNER_CACHE_STATS = dict(hits=0, misses=0, evictions=0)
+
+
+def set_runner_cache_limit(max_entries: int) -> None:
+    """Bound the compiled-runner LRU (env: REPRO_RUNNER_CACHE_MAX).
+
+    Long-lived sweep services accumulate one jitted runner per padded
+    shape x SimConfig; each pins its compiled executables.  The LRU
+    evicts the least-recently-used runner beyond `max_entries` —
+    eviction only costs recompilation, never changes results
+    (tests/test_sweep.py::test_runner_cache_lru_eviction)."""
+    global _RUNNER_CACHE_MAX
+    if max_entries < 1:
+        raise ValueError("runner cache needs at least 1 entry")
+    _RUNNER_CACHE_MAX = max_entries
+    while len(_RUNNER_CACHE) > _RUNNER_CACHE_MAX:
+        _RUNNER_CACHE.popitem(last=False)
+        _RUNNER_CACHE_STATS["evictions"] += 1
 
 
 def get_batch_runner(nm: int, pm: int, cm: int, dm: int, cfg: SimConfig,
                      alloc_impl: str, kmax: int = 0):
-    """Compiled-runner cache keyed on the padded shape + SimConfig; a new
+    """Compiled-runner LRU keyed on the padded shape + SimConfig; a new
     topology padded to a known shape reuses the existing executable.
     kmax > 0 selects the workload (phase-schedule) runner variant."""
     key = (nm, pm, cm, dm, cfg, alloc_impl, kmax, jax.default_backend())
     fn = _RUNNER_CACHE.get(key)
     if fn is None:
+        _RUNNER_CACHE_STATS["misses"] += 1
         fn = _RUNNER_CACHE[key] = _make_batch_runner(
             nm, pm, cm, dm, cfg, alloc_impl, kmax)
+        while len(_RUNNER_CACHE) > _RUNNER_CACHE_MAX:
+            _RUNNER_CACHE.popitem(last=False)
+            _RUNNER_CACHE_STATS["evictions"] += 1
+    else:
+        _RUNNER_CACHE_STATS["hits"] += 1
+        _RUNNER_CACHE.move_to_end(key)
     return fn
 
 
 def runner_cache_info() -> dict:
-    """Executable-cache introspection for the sweep engine's stats:
-    compiled-variant count per full cache key (shape + config + impl)."""
-    return {key: fn._cache_size() for key, fn in _RUNNER_CACHE.items()}
+    """Executable-cache introspection (sweep-engine stats + ops):
+    `entries` maps each full cache key (shape + config + impl) to its
+    compiled-variant count; `hits`/`misses`/`evictions` count LRU
+    traffic since process start (monotonic, survive cache clears)."""
+    return dict(
+        entries={key: fn._cache_size()
+                 for key, fn in _RUNNER_CACHE.items()},
+        size=len(_RUNNER_CACHE), max_size=_RUNNER_CACHE_MAX,
+        **_RUNNER_CACHE_STATS)
 
 
 def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,

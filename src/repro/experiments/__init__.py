@@ -1,0 +1,41 @@
+"""Declarative experiment API (DESIGN.md §10): the one front door.
+
+    import repro.experiments as X
+
+    exp = X.Experiment.grid(
+        topologies=["mesh", "folded_hexa_torus"], sizes=[16, 64],
+        substrates=["organic", "glass"],
+        traffics=["uniform", my_workload],          # static + workload
+        rates=X.SaturationGrid(6), cfg=SimConfig(...))
+    frame = X.run(exp)                              # plan + execute
+    frame.to_csv("results/my_grid.csv")             # versioned schema
+
+`Scenario -> plan -> execute -> ResultFrame` replaces the six ad-hoc
+sweep entry points that grew across PR 1–2 (`simulate`, `run_batch`,
+`run_workloads`, `evaluate_many`, `evaluate_cases`,
+`evaluate_workload_cases`): `simulate`/`run_batch`/`run_workloads`
+remain the *primitive* layer this API lowers onto, while the three
+case-level entry points are deprecation shims forwarding here.
+
+The pipeline reproduces the legacy paths bitwise on identical grids
+(tests/test_experiments.py): planning resolves the same routing cache,
+traffic registries and rate grids; execution lowers onto the same
+padded `SweepEngine` batches, whose padding invariance makes results
+independent of how scenarios are grouped.
+"""
+from .execute import engine_for, execute, run
+from .frame import COLUMNS, ResultFrame, scenario_row
+from .io import SCHEMA_VERSION, read_json, write_csv, write_json
+from .plan import Bucket, BucketKey, Plan, PlannedScenario, plan
+from .scenario import (CustomTraffic, Experiment, ExplicitRates,
+                       RatePolicy, SaturationGrid, Scenario,
+                       scenario_from_case)
+
+__all__ = [
+    "Scenario", "Experiment", "CustomTraffic", "SaturationGrid",
+    "ExplicitRates", "RatePolicy", "scenario_from_case",
+    "plan", "Plan", "PlannedScenario", "Bucket", "BucketKey",
+    "execute", "run", "engine_for",
+    "ResultFrame", "COLUMNS", "scenario_row",
+    "SCHEMA_VERSION", "write_csv", "write_json", "read_json",
+]

@@ -1,0 +1,127 @@
+"""Experiment executor (DESIGN.md §10): Plan -> batched runs -> frame.
+
+Runs each plan bucket through the shared `SweepEngine` — static buckets
+via `run_specs`, workload buckets via `run_workloads`, analytic buckets
+without any simulation — and assembles a `ResultFrame` with one row per
+scenario in experiment order.
+
+Scale/robustness knobs:
+
+  * `chunk_size` streams a bucket in chunks of that many scenarios
+    instead of one monolithic batch — bounds device memory for huge
+    grids and gives `progress` callbacks something to report between
+    compiled runs (the engine's executable cache makes the chunks share
+    one compiled program per bucket shape);
+  * `on_error="skip"` isolates partial failures: a chunk that raises
+    marks only its own scenarios `status="failed"` (with the error
+    message in the row) and the rest of the experiment completes;
+  * engines are shared per `SimConfig` (`engine_for`), so every
+    experiment, benchmark and deprecation shim in a process reuses one
+    compiled-executable cache.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from repro.core.simulator import SimConfig
+from repro.sweep.engine import SweepEngine
+
+from .frame import ResultFrame, _identity_row, scenario_row
+from .plan import Bucket, Plan, plan as make_plan
+from .scenario import Experiment
+
+_ENGINES: dict[SimConfig, SweepEngine] = {}
+
+
+def engine_for(cfg: SimConfig = SimConfig()) -> SweepEngine:
+    """Process-wide engine per SimConfig (shared executable cache)."""
+    if cfg not in _ENGINES:
+        _ENGINES[cfg] = SweepEngine(cfg=cfg)
+    return _ENGINES[cfg]
+
+
+def _chunks(items: list, size: int | None):
+    if not size or size >= len(items):
+        yield items
+        return
+    for i in range(0, len(items), size):
+        yield items[i:i + size]
+
+
+def _run_chunk(engine: SweepEngine, bucket: Bucket, chunk: list,
+               single_program: bool = False) -> list:
+    """One engine call for `chunk`; returns raw result dicts in order."""
+    if bucket.key.kind == "analytic":
+        return [None] * len(chunk)
+    rates = np.stack([ps.rates for ps in chunk]).astype(np.float32)
+    specs = [ps.spec for ps in chunk]
+    if bucket.key.kind == "workload":
+        return engine.run_workloads(specs, [ps.sched_spec for ps in chunk],
+                                    rates, single_program=single_program)
+    return engine.run_specs(specs, rates, single_program=single_program)
+
+
+def execute(pl: Plan, engine: SweepEngine | None = None,
+            chunk_size: int | None = None,
+            progress: Callable[[int, int, object], None] | None = None,
+            on_error: str = "raise") -> ResultFrame:
+    """Run a plan and return the `ResultFrame` (scenario order)."""
+    if on_error not in ("raise", "skip"):
+        raise ValueError(f"on_error must be 'raise' or 'skip', "
+                         f"got {on_error!r}")
+    exp = pl.experiment
+    engine = engine or engine_for(exp.cfg)
+    n = len(exp.scenarios)
+    results: list = [None] * n
+    planned: list = [None] * n
+    rows: list = [None] * n
+    errors: list = []
+    for i, reason in pl.skipped:
+        rows[i] = _identity_row(exp, exp.scenarios[i], "invalid", reason)
+    total, done = pl.n_planned, 0
+    for bucket in pl.buckets:
+        for chunk in _chunks(bucket.items, chunk_size):
+            try:
+                out = _run_chunk(engine, bucket, chunk,
+                                 single_program=pl.single_program)
+            except Exception as e:           # noqa: BLE001 — isolate chunk
+                if on_error == "raise":
+                    raise
+                msg = f"{type(e).__name__}: {e}"
+                for ps in chunk:
+                    planned[ps.index] = ps
+                    errors.append((ps.index, msg))
+                    rows[ps.index] = _identity_row(exp, ps.scenario,
+                                                   "failed", msg)
+                out = None
+            if out is not None:
+                for ps, res in zip(chunk, out):
+                    planned[ps.index] = ps
+                    results[ps.index] = res
+                    rows[ps.index] = scenario_row(exp, ps, res)
+            done += len(chunk)
+            if progress is not None:
+                progress(done, total, bucket.key)
+    return ResultFrame(experiment=exp, rows=rows, results=results,
+                       planned=planned, errors=errors)
+
+
+def run(experiment: Experiment, engine: SweepEngine | None = None,
+        chunk_size: int | None = None,
+        progress: Callable[[int, int, object], None] | None = None,
+        on_error: str = "raise",
+        single_program: bool = False) -> ResultFrame:
+    """The one front door: plan + execute in one call.
+
+        frame = repro.experiments.run(Experiment([...], cfg=...))
+
+    See `plan()` to inspect bucketing (and `single_program`) first,
+    `execute()` for the streaming/failure knobs.
+    """
+    engine = engine or engine_for(experiment.cfg)
+    return execute(make_plan(experiment, engine,
+                             single_program=single_program),
+                   engine=engine, chunk_size=chunk_size,
+                   progress=progress, on_error=on_error)

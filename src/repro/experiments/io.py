@@ -1,0 +1,99 @@
+"""Versioned result writers (DESIGN.md §10): one CSV/JSON code path.
+
+Every benchmark and the `ResultFrame` writers funnel through here, so
+all artifacts under results/ share one column discipline:
+
+  * a `schema_version` column (first) stamps the row format — bump
+    `SCHEMA_VERSION` on any breaking change to how rows are derived;
+  * column order is stable: either the caller's explicit `columns`, or
+    first-seen order across all rows (so adding a field to later rows
+    cannot silently reshuffle a header);
+  * missing values are written as empty cells, not `"None"`.
+
+`benchmarks.common.write_csv` forwards here — the per-benchmark CSV
+writers it replaced each had their own column-ordering quirks.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Sequence
+
+import numpy as np
+
+#: bump on any breaking change to result-row derivation or layout
+SCHEMA_VERSION = 1
+
+
+def stable_columns(rows: Sequence[dict],
+                   columns: Sequence[str] | None = None) -> list:
+    """schema_version + explicit columns, or first-seen union order."""
+    if columns is None:
+        seen: dict = {}
+        for r in rows:
+            for k in r:
+                seen.setdefault(k, None)
+        columns = list(seen)
+    cols = [c for c in columns if c != "schema_version"]
+    return ["schema_version"] + cols
+
+
+def _cell(value) -> str:
+    if value is None:
+        return ""
+    if isinstance(value, (np.floating, np.integer)):
+        value = value.item()
+    s = str(value)
+    if any(c in s for c in ',"\n\r'):      # RFC-4180 quoting
+        s = '"' + s.replace('"', '""') + '"'
+    return s
+
+
+def write_csv(path: str, rows: Sequence[dict],
+              columns: Sequence[str] | None = None) -> list:
+    """Write tidy rows with a stable, versioned header; returns the
+    column order used.  Falsy rows (None placeholders) are dropped."""
+    rows = [r for r in rows if r]
+    if not rows:
+        return []
+    cols = stable_columns(rows, columns)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(_cell(r.get(c, SCHEMA_VERSION
+                                         if c == "schema_version" else
+                                         None))
+                             for c in cols) + "\n")
+    print(f"[io] wrote {path} ({len(rows)} rows, schema v{SCHEMA_VERSION})")
+    return cols
+
+
+def write_json(path: str, rows: Sequence[dict],
+               meta: dict | None = None) -> None:
+    """Write rows as a versioned JSON document: {schema_version, meta
+    fields, rows}.  numpy scalars/arrays are converted to plain JSON."""
+    def default(o):
+        if isinstance(o, (np.floating, np.integer)):
+            return o.item()
+        if isinstance(o, np.ndarray):
+            return o.tolist()
+        return str(o)
+
+    doc = dict(schema_version=SCHEMA_VERSION, **(meta or {}),
+               rows=[r for r in rows if r])
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, default=default)
+    print(f"[io] wrote {path} ({len(doc['rows'])} rows, "
+          f"schema v{SCHEMA_VERSION})")
+
+
+def read_json(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        raise ValueError(f"{path}: schema_version "
+                         f"{doc.get('schema_version')!r} != "
+                         f"{SCHEMA_VERSION} (regenerate the artifact)")
+    return doc

@@ -1,0 +1,179 @@
+"""Experiment planner (DESIGN.md §10): Scenario -> engine-ready buckets.
+
+`plan(experiment)` resolves every scenario against the real registries
+— N-constraints from `topology.N_CONSTRAINTS`, routing via the shared
+`cached_routing`, traffic patterns / workload schedules, per-scenario
+rate grids — and groups the survivors into *buckets* that lower 1:1
+onto `SweepEngine` padded batches:
+
+  * bucket key = (kind, R, bucketed PadShape, bucketed phase count),
+    mirroring the engine's own shape-rounding policy so one bucket is
+    one engine group (one compiled program, typically reused);
+  * static scenarios and workload scenarios flow through the same
+    pipeline — a workload scenario simply carries a compiled
+    `SchedSpec` next to its `SimSpec` (its spec's traffic matrix is the
+    schedule's time-averaged demand, used only for analytic seeding);
+  * invalid scenarios are *skipped with a reason*, never silently
+    dropped — the executor emits a `status="invalid"` row for each.
+
+Planning is cheap (no simulation) and deterministic; the plan can be
+inspected (`Plan.describe()`) before committing to execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import traffic as TR
+from repro.core.routing import cached_routing
+from repro.core.simulator import SimSpec, make_spec
+from repro.sweep.engine import SweepEngine, _round_up
+from repro.sweep.padding import PadShape
+
+from .scenario import CustomTraffic, Experiment, Scenario
+
+
+@dataclasses.dataclass
+class PlannedScenario:
+    """One validated, resolved scenario, ready for the engine."""
+    index: int                  # position in experiment.scenarios
+    scenario: Scenario
+    topo: object
+    routing: object
+    traffic: np.ndarray         # static matrix, or schedule mean demand
+    analytic: float             # channel-load saturation bound
+    spec: SimSpec | None        # None on the analytic backend
+    schedule: object | None     # fitted workloads.Schedule (labels)
+    sched_spec: object | None   # compiled simulator.SchedSpec
+    rates: np.ndarray | None    # [R] resolved offered-rate grid
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    kind: str                   # "static" | "workload" | "analytic"
+    n_rates: int
+    shape: PadShape | None      # engine-bucketed padded shape
+    k_pad: int                  # bucketed phase-axis size (0 = static)
+
+
+@dataclasses.dataclass
+class Bucket:
+    key: BucketKey
+    items: list
+
+
+@dataclasses.dataclass
+class Plan:
+    experiment: Experiment
+    buckets: list
+    skipped: list               # [(scenario index, reason)]
+    single_program: bool = False
+
+    @property
+    def n_planned(self) -> int:
+        return sum(len(b.items) for b in self.buckets)
+
+    def describe(self) -> str:
+        lines = [f"plan[{self.experiment.name}]: "
+                 f"{len(self.experiment)} scenarios -> "
+                 f"{self.n_planned} planned in {len(self.buckets)} "
+                 f"bucket(s), {len(self.skipped)} skipped"]
+        for b in self.buckets:
+            k = b.key
+            shape = (f"N{k.shape.n} P{k.shape.p} C{k.shape.c} D{k.shape.d}"
+                     if k.shape else "-")
+            lines.append(f"  [{k.kind:8s}] R={k.n_rates} K={k.k_pad} "
+                         f"shape=({shape}) x{len(b.items)}")
+        for i, reason in self.skipped:
+            lines.append(f"  skip #{i}: {reason}")
+        return "\n".join(lines)
+
+
+def _resolve_traffic(scenario: Scenario, topo, meas: int):
+    """(static matrix | schedule mean, fitted Schedule | None)."""
+    tr = scenario.traffic
+    if isinstance(tr, str):
+        if tr not in TR.PATTERNS:
+            raise KeyError(f"unknown traffic pattern {tr!r}; choose from "
+                           f"{sorted(TR.PATTERNS)} or pass a Workload")
+        return TR.PATTERNS[tr](topo), None
+    if isinstance(tr, CustomTraffic):
+        return np.asarray(tr.build(topo), np.float64), None
+    schedule = tr.build(topo) if hasattr(tr, "build") else tr(topo)
+    if not hasattr(schedule, "mean_traffic"):
+        raise TypeError(
+            f"traffic callable {getattr(tr, 'name', tr)!r} returned "
+            f"{type(schedule).__name__}, not a workloads.Schedule; wrap "
+            "plain topo -> matrix builders in experiments.CustomTraffic")
+    if scenario.fit_schedule:
+        schedule = schedule.fit(meas)
+    return schedule.mean_traffic(), schedule
+
+
+def plan(experiment: Experiment, engine: SweepEngine | None = None,
+         single_program: bool = False) -> Plan:
+    """Validate + resolve every scenario and bucket them for execution.
+
+    `engine` only contributes its shape-bucketing policy (so the plan's
+    buckets coincide with the engine groups executed later); planning
+    never compiles or runs anything.
+
+    single_program=True coalesces all scenarios of one (kind, R, phase
+    bucket) into a single bucket that the executor runs as ONE compiled
+    program padded to the group's max shape (the engine's
+    `run_specs(..., single_program=True)` mode) — fewer compiles at the
+    cost of padding small topologies to the largest shape present.
+    """
+    engine = engine or SweepEngine(cfg=experiment.cfg)
+    meas = experiment.cfg.cycles - experiment.cfg.warmup
+    sim_backend = experiment.backend == "sim"
+    buckets: dict[BucketKey, Bucket] = {}
+    skipped: list = []
+    for i, s in enumerate(experiment.scenarios):
+        if not s.valid:
+            skipped.append((i, f"{s.topology} does not support N={s.n} "
+                               "(topology.N_CONSTRAINTS)"))
+            continue
+        topo, routing = cached_routing(s.topology, s.n, s.substrate,
+                                       s.area, s.roles)
+        tm, schedule = _resolve_traffic(s, topo, meas)
+        analytic = routing.saturation_rate(tm)
+        spec = sched_spec = rates = None
+        if sim_backend:
+            spec = make_spec(routing, tm)
+            sched_spec = schedule.compile() if schedule is not None else None
+            rates = np.asarray(s.rates.resolve(analytic), np.float64)
+            shape = engine.bucket_shape(
+                PadShape(n=spec.n, p=spec.p, c=spec.c, d=spec.d))
+            k = sched_spec.k if sched_spec is not None else 0
+            k_pad = _round_up(k, engine.k_round) if engine.bucket and k \
+                else k
+            key = BucketKey(kind=s.kind, n_rates=len(rates), shape=shape,
+                            k_pad=k_pad)
+        else:
+            key = BucketKey(kind="analytic", n_rates=0, shape=None, k_pad=0)
+        ps = PlannedScenario(index=i, scenario=s, topo=topo,
+                             routing=routing, traffic=tm,
+                             analytic=float(analytic), spec=spec,
+                             schedule=schedule, sched_spec=sched_spec,
+                             rates=rates)
+        buckets.setdefault(key, Bucket(key=key, items=[])).items.append(ps)
+    out = list(buckets.values())
+    if single_program and sim_backend:
+        merged: dict[tuple, Bucket] = {}
+        for b in out:
+            mk = (b.key.kind, b.key.n_rates)
+            if mk not in merged:
+                merged[mk] = Bucket(key=b.key, items=list(b.items))
+            else:
+                m = merged[mk]
+                specs = [ps.spec for ps in m.items + b.items]
+                m.key = BucketKey(
+                    kind=b.key.kind, n_rates=b.key.n_rates,
+                    shape=engine.bucket_shape(PadShape.of(specs)),
+                    k_pad=max(m.key.k_pad, b.key.k_pad))
+                m.items += b.items
+        out = list(merged.values())
+    return Plan(experiment=experiment, buckets=out, skipped=skipped,
+                single_program=single_program)

@@ -1,0 +1,193 @@
+"""Declarative experiment descriptions (DESIGN.md §10).
+
+A `Scenario` names ONE evaluation cell of the paper's grids — a
+topology at a size, on a substrate, under a traffic source, swept over
+an injection-rate policy.  An `Experiment` is an ordered list of
+scenarios sharing one `SimConfig` (and a backend: the cycle-accurate
+simulator or the analytic channel-load model).  Nothing here runs
+anything: `repro.experiments.plan` lowers an experiment onto the
+batched sweep engine and `repro.experiments.execute` runs the plan.
+
+Traffic sources (the `traffic` field) come in three flavours:
+
+  * a `str` — a named static pattern from `repro.core.traffic.PATTERNS`
+    ("uniform", "tornado", ...);
+  * a `CustomTraffic` — a named `topo -> [N, N] matrix` builder for
+    static matrices that are not registry patterns (e.g. one region of
+    a Netrace-like trace);
+  * a `repro.workloads.Workload` (or any callable `topo -> Schedule`)
+    — a time-varying phase schedule replayed by the simulator
+    (DESIGN.md §9).
+
+Rate policies say which offered rates the sweep visits:
+
+  * `SaturationGrid(n_rates)` — a grid bracketing the scenario's
+    analytic channel-load bound (resolved per scenario at plan time,
+    exactly `simulator.saturation_rate_grid`);
+  * `ExplicitRates(rates)` — a fixed grid shared verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import topology as T
+from repro.core.simulator import SimConfig, saturation_rate_grid
+
+
+# ---------------------------------------------------------------------
+# rate policies
+# ---------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SaturationGrid:
+    """Offered-rate grid seeded from the analytic saturation bound."""
+    n_rates: int = 6
+
+    def resolve(self, analytic: float) -> np.ndarray:
+        return saturation_rate_grid(analytic, self.n_rates)
+
+    def describe(self) -> str:
+        return f"saturation_grid({self.n_rates})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ExplicitRates:
+    """A fixed offered-rate grid, used verbatim for the scenario."""
+    rates: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "rates",
+            tuple(float(r) for r in np.ravel(np.asarray(self.rates))))
+        if not self.rates:
+            raise ValueError("ExplicitRates needs at least one rate")
+
+    def resolve(self, analytic: float) -> np.ndarray:
+        return np.asarray(self.rates, np.float64)
+
+    def describe(self) -> str:
+        return "rates(" + ",".join(f"{r:g}" for r in self.rates) + ")"
+
+
+RatePolicy = SaturationGrid | ExplicitRates
+
+
+# ---------------------------------------------------------------------
+# traffic sources
+# ---------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CustomTraffic:
+    """A named static-traffic builder: `build(topo) -> [N, N]` matrix."""
+    name: str
+    build: Callable
+
+
+def traffic_kind(traffic) -> str:
+    """'static' for named patterns / CustomTraffic, 'workload' for
+    schedule builders (`Workload` or bare `topo -> Schedule`)."""
+    if isinstance(traffic, (str, CustomTraffic)):
+        return "static"
+    if hasattr(traffic, "build") or callable(traffic):
+        return "workload"
+    raise TypeError(f"unsupported traffic source {traffic!r}")
+
+
+def traffic_name(traffic) -> str:
+    if isinstance(traffic, str):
+        return traffic
+    name = getattr(traffic, "name", "")
+    return str(name) if name else getattr(traffic, "__name__", "custom")
+
+
+# ---------------------------------------------------------------------
+# Scenario / Experiment
+# ---------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One evaluation cell: topology x substrate x traffic x rates."""
+    topology: str
+    n: int
+    substrate: str = "organic"
+    traffic: object = "uniform"      # str | CustomTraffic | Workload
+    area: float = 74.0
+    roles: str = "homogeneous"
+    rates: RatePolicy = SaturationGrid()
+    fit_schedule: bool = True        # fit workloads to the meas. window
+    tags: tuple = ()                 # extra ((column, value), ...) pairs
+
+    def __post_init__(self):
+        from .frame import COLUMNS   # deferred: frame imports scenario
+        bad = [k for k, _ in self.tags if k in COLUMNS]
+        if bad:
+            raise ValueError(f"tags {bad} collide with reserved result "
+                             f"columns; pick different tag names")
+
+    @property
+    def kind(self) -> str:
+        return traffic_kind(self.traffic)
+
+    @property
+    def traffic_name(self) -> str:
+        return traffic_name(self.traffic)
+
+    @property
+    def valid(self) -> bool:
+        return not (self.topology in T.N_CONSTRAINTS
+                    and not T.N_CONSTRAINTS[self.topology](self.n))
+
+    @property
+    def label(self) -> str:
+        return (f"{self.topology}/n{self.n}/{self.substrate}/"
+                f"{self.traffic_name}")
+
+
+def scenario_from_case(case, traffic=None,
+                       rates: RatePolicy = SaturationGrid()) -> Scenario:
+    """Adapt a legacy `sweep.SweepCase` (its pattern, or an explicit
+    workload riding on its placement) into a Scenario."""
+    return Scenario(topology=case.name, n=case.n, substrate=case.substrate,
+                    traffic=case.pattern if traffic is None else traffic,
+                    area=case.area, roles=case.roles, rates=rates)
+
+
+@dataclasses.dataclass
+class Experiment:
+    """An ordered list of scenarios sharing one SimConfig + backend."""
+    scenarios: Sequence[Scenario]
+    cfg: SimConfig = SimConfig()
+    name: str = "experiment"
+    backend: str = "sim"             # "sim" | "analytic"
+
+    def __post_init__(self):
+        self.scenarios = list(self.scenarios)
+        if self.backend not in ("sim", "analytic"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+
+    def __len__(self) -> int:
+        return len(self.scenarios)
+
+    def __iter__(self):
+        return iter(self.scenarios)
+
+    @classmethod
+    def grid(cls, topologies: Sequence[str], sizes: Sequence[int],
+             substrates: Sequence[str] = ("organic",),
+             traffics: Sequence = ("uniform",),
+             areas: Sequence[float] = (74.0,),
+             roles: Sequence[str] = ("homogeneous",),
+             rates: RatePolicy = SaturationGrid(),
+             cfg: SimConfig = SimConfig(), name: str = "grid",
+             backend: str = "sim") -> "Experiment":
+        """Product grid in (area, substrate, role, traffic, topology,
+        size) major-to-minor order — the figure benches' loop order."""
+        scens = [Scenario(topology=t, n=n, substrate=sub, traffic=tr,
+                          area=a, roles=ro, rates=rates)
+                 for a, sub, ro, tr, t, n in itertools.product(
+                     areas, substrates, roles, traffics, topologies, sizes)]
+        return cls(scens, cfg=cfg, name=name, backend=backend)

@@ -10,8 +10,12 @@ to a sweep reuses the existing executable.
     rows = eng.sweep(["mesh", "hexamesh", "folded_hexa_torus"], n=16)
 
 Workload mode (DESIGN.md §9) batches (topology, phase-schedule) pairs
-the same way: `eng.run_workloads(specs, schedules, rates)` /
-`eng.evaluate_workload_cases(cases, workloads)`.
+the same way: `eng.run_workloads(specs, schedules, rates)`.
+
+Case-level evaluation (grids of topologies x traffic x rates) moved to
+the declarative experiment API — `repro.experiments` (DESIGN.md §10);
+`evaluate_cases` / `evaluate_workload_cases` remain as deprecation
+shims forwarding there.
 """
 from .engine import SweepCase, SweepEngine, default_engine
 from .padding import (BatchSpec, PadShape, SchedBatch, pad_schedule,

@@ -12,15 +12,18 @@ per-topology recompile loop into a handful of batched compiled programs:
   3. padding invariance (see `repro.sweep.padding`) guarantees results
      are bitwise-equal to the single-spec `simulate` path.
 
-The engine also offers case-level evaluation (`evaluate_cases`) used by
-`benchmarks/`: it builds routing + traffic per (topology, N, substrate,
-pattern) cell, seeds a per-cell rate grid from the analytic channel-load
-bound, and reports simulated saturation like
-`simulator.saturation_throughput` — but for all cells at once.
+Case-level evaluation moved to the declarative experiment API
+(`repro.experiments`, DESIGN.md §10): describe a grid of `Scenario`s,
+`plan` it, `execute` it, get a `ResultFrame`.  The old case-level entry
+points here (`evaluate_cases`, `evaluate_workload_cases`) remain as
+deprecation shims forwarding to that pipeline; `run_specs` /
+`run_workloads` stay first-class — they are the primitive layer the
+experiment executor lowers onto.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import NamedTuple, Sequence
 
 import numpy as np
@@ -29,7 +32,7 @@ from repro.core import simulator as sim
 from repro.core import topology as T
 from repro.core import traffic as TR
 from repro.core.routing import cached_routing
-from repro.core.simulator import SimConfig, SimSpec, make_spec
+from repro.core.simulator import SimConfig, SimSpec
 
 from .padding import PadShape
 
@@ -147,7 +150,7 @@ class SweepEngine:
                     k_bucket(i))
                 groups.setdefault(key, []).append(i)
 
-        before = sum(sim.runner_cache_info().values())
+        before = sum(sim.runner_cache_info()["entries"].values())
         results: list = [None] * s
         for (shape, k_pad), idxs in groups.items():
             g_specs = [specs[i] for i in idxs]
@@ -174,124 +177,105 @@ class SweepEngine:
                     k: (v[:n_rates] if isinstance(v, np.ndarray)
                         and k not in self._PER_PHASE_KEYS else v)
                     for k, v in out[j].items()}
-        after = sum(sim.runner_cache_info().values())
+        after = sum(sim.runner_cache_info()["entries"].values())
+        compiled = max(after - before, 0)   # LRU eviction can shrink sums
         self.stats["runs"] += 1
         self.stats["groups"] += len(groups)
         self.stats["specs"] += s
-        self.stats["compiles"] += after - before
-        self.stats["reuses"] += max(len(groups) - (after - before), 0)
+        self.stats["compiles"] += compiled
+        self.stats["reuses"] += max(len(groups) - compiled, 0)
         return results
 
-    # ---- case-level convenience ----------------------------------------
+    # ---- case-level deprecation shims ----------------------------------
+    # Case-level evaluation was redesigned into the declarative
+    # experiment API (repro.experiments, DESIGN.md §10).  These shims
+    # forward to it and reshape the ResultFrame into the legacy
+    # list-of-dicts; they will be removed once nothing imports them.
+
+    def _experiment_frame(self, scenarios):
+        from repro import experiments as X
+        exp = X.Experiment(scenarios, cfg=self.cfg, name="legacy_shim")
+        return X.execute(X.plan(exp, engine=self), engine=self)
+
     def evaluate_cases(self, cases: Sequence[SweepCase],
                        n_rates: int = 6) -> list[dict | None]:
-        """Simulated saturation for many cells in few batched programs.
+        """DEPRECATED: use `repro.experiments.run` on an `Experiment` of
+        static `Scenario`s (see README migration table).
 
-        Per cell: rate grid seeded by the analytic channel-load bound,
-        then `sim_saturation` = max delivered throughput over the grid
-        (exactly what `saturation_throughput` reports per spec).
-        Invalid cells (N-constraint) yield None.
+        Simulated saturation for many cells; invalid cells yield None.
         """
-        live = [(i, c) for i, c in enumerate(cases) if c.valid]
-        specs, rate_rows, analytic = [], [], []
-        for _, case in live:
-            routing, tm = case.build()
-            a = routing.saturation_rate(tm)
-            specs.append(make_spec(routing, tm))
-            rate_rows.append(sim.saturation_rate_grid(a, n_rates))
-            analytic.append(a)
-        out: list = [None] * len(cases)
-        if not specs:
-            return out
-        results = self.run_specs(specs, np.stack(rate_rows))
-        for (i, case), res, a in zip(live, results, analytic):
-            k = int(np.argmax(res["throughput"]))
-            out[i] = dict(case=case,
-                          sim_saturation=float(res["throughput"][k]),
-                          analytic_saturation=float(a),
-                          latency_at_sat=float(res["latency"][k]),
-                          sweep=res)
+        warnings.warn(
+            "SweepEngine.evaluate_cases is deprecated; build an "
+            "Experiment of Scenarios and call repro.experiments.run",
+            DeprecationWarning, stacklevel=2)
+        from repro import experiments as X
+        frame = self._experiment_frame(
+            [X.scenario_from_case(c, rates=X.SaturationGrid(n_rates))
+             for c in cases])
+        out = []
+        for i, case in enumerate(cases):
+            res = frame.case_result(i)
+            if res is not None:
+                res["case"] = case
+            out.append(res)
         return out
 
     def evaluate_workload_cases(self, cases: Sequence[SweepCase],
                                 workloads: Sequence, n_rates: int = 5,
                                 fit: bool = True) -> list[dict | None]:
-        """Cross topologies x workloads in few batched programs.
+        """DEPRECATED: use `repro.experiments.run` on an `Experiment`
+        whose Scenarios carry the workloads as their `traffic` (see
+        README migration table).
 
-        workloads: `repro.workloads.Workload`s (or any callable
-        `topo -> Schedule`).  Returns len(cases) * len(workloads) rows in
-        case-major order; invalid cases yield None rows.  Per row:
-        saturation over the rate grid (seeded from the workload's mean
-        traffic) plus the per-phase breakdown at the saturating rate.
-
-        fit=True (default) rescales each schedule so one full replay
-        covers exactly the measurement window (cycles - warmup) — every
-        phase is measured for exactly its share of the window.
+        Returns len(cases) * len(workloads) rows in case-major order;
+        invalid cases yield None rows.
         """
-        grid: list = [None] * (len(cases) * len(workloads))
-        specs, scheds, rate_rows, live = [], [], [], []
-        meas = self.cfg.cycles - self.cfg.warmup
+        warnings.warn(
+            "SweepEngine.evaluate_workload_cases is deprecated; build "
+            "an Experiment of workload Scenarios and call "
+            "repro.experiments.run", DeprecationWarning, stacklevel=2)
+        from repro import experiments as X
+        frame = self._experiment_frame(
+            [dataclasses.replace(
+                X.scenario_from_case(case, traffic=wl,
+                                     rates=X.SaturationGrid(n_rates)),
+                fit_schedule=fit)
+             for case in cases for wl in workloads])
+        out = []
         for ci, case in enumerate(cases):
-            if not case.valid:
-                continue
-            topo, routing = cached_routing(case.name, case.n,
-                                           case.substrate, case.area,
-                                           case.roles)
-            for wi, wl in enumerate(workloads):
-                schedule = wl.build(topo) if hasattr(wl, "build") \
-                    else wl(topo)
-                if fit:
-                    schedule = schedule.fit(meas)
-                mean = schedule.mean_traffic()
-                analytic = routing.saturation_rate(mean)
-                specs.append(make_spec(routing, mean))
-                scheds.append(schedule)
-                rate_rows.append(sim.saturation_rate_grid(analytic,
-                                                          n_rates))
-                live.append((ci * len(workloads) + wi, case, schedule,
-                             analytic))
-        if not specs:
-            return grid
-        results = self.run_workloads(specs, scheds, np.stack(rate_rows))
-        for (slot, case, schedule, analytic), res in zip(live, results):
-            k = int(np.argmax(res["throughput"]))
-            grid[slot] = dict(
-                case=case, workload=schedule.name,
-                sim_saturation=float(res["throughput"][k]),
-                analytic_saturation=float(analytic),
-                latency_at_sat=float(res["latency"][k]),
-                phase_labels=[p.label or str(i) for i, p in
-                              enumerate(schedule.phases)],
-                throughput_ph=res["throughput_ph"][k],
-                latency_ph=res["latency_ph"][k],
-                offered_rate_ph=res["offered_rate_ph"][k],
-                phase_cycles=res["phase_cycles"], sweep=res)
-        return grid
+            for wi in range(len(workloads)):
+                res = frame.workload_result(ci * len(workloads) + wi)
+                if res is not None:
+                    res["case"] = case
+                out.append(res)
+        return out
 
     def sweep(self, names: Sequence[str], n: int, substrate: str = "organic",
               pattern: str = "uniform", area: float = 74.0,
               roles: str = "homogeneous", n_rates: int = 6) -> list[dict]:
-        """Evaluate several topologies at one size in one batched sweep."""
-        cases = [SweepCase(name, n, substrate, pattern, area, roles)
-                 for name in names]
+        """Evaluate several topologies at one size in one batched sweep
+        (a thin convenience over `repro.experiments.run`)."""
+        from repro import experiments as X
+        frame = self._experiment_frame(
+            [X.Scenario(name, n, substrate, pattern, area, roles,
+                        rates=X.SaturationGrid(n_rates))
+             for name in names])
         rows = []
-        for case, res in zip(cases, self.evaluate_cases(cases, n_rates)):
+        for i, name in enumerate(names):
+            res = frame.case_result(i)
             if res is None:
                 continue
-            rows.append(dict(topology=case.name, n=case.n,
-                             substrate=case.substrate, pattern=case.pattern,
+            rows.append(dict(topology=name, n=n, substrate=substrate,
+                             pattern=pattern,
                              sim_saturation=res["sim_saturation"],
                              analytic_saturation=res["analytic_saturation"],
                              latency_at_sat=res["latency_at_sat"]))
         return rows
 
 
-_DEFAULT: SweepEngine | None = None
-
-
 def default_engine() -> SweepEngine:
-    """Process-wide engine so benchmarks share one executable cache."""
-    global _DEFAULT
-    if _DEFAULT is None:
-        _DEFAULT = SweepEngine()
-    return _DEFAULT
+    """Process-wide engine for the default SimConfig.  Forwards to the
+    experiment executor's per-config registry so legacy callers and the
+    declarative pipeline share one engine (and its stats)."""
+    from repro.experiments import engine_for
+    return engine_for(SimConfig())

@@ -144,6 +144,44 @@ def test_alloc_pallas_interpret_matches_jnp():
         np.testing.assert_array_equal(ref[0][k], got[0][k], err_msg=k)
 
 
+def test_runner_cache_lru_eviction_does_not_change_results():
+    """Bounding the compiled-runner cache only costs recompiles: with a
+    1-entry LRU, alternating two padded shapes evicts on every switch
+    yet reproduces the unbounded-cache counters bitwise, and the
+    hit/miss/eviction counters account for the traffic."""
+    tiny = SimConfig(cycles=80, warmup=20)
+    rates = np.array([0.1, 0.3], np.float32)
+    specs = []
+    for name, n in (("mesh", 16), ("folded_hexa_torus", 36)):
+        r = build_routing(T.build(name, n))
+        specs.append(make_spec(r, TR.uniform(r.topo)))
+    want = [run_batch([s], rates[None, :], tiny)[0] for s in specs]
+
+    old_max = sim.runner_cache_info()["max_size"]
+    sim._RUNNER_CACHE.clear()
+    before = sim.runner_cache_info()
+    try:
+        sim.set_runner_cache_limit(1)
+        got = []
+        for _ in range(2):
+            for s in specs:                 # A, B, A, B -> evict each time
+                got.append(run_batch([s], rates[None, :], tiny)[0])
+        info = sim.runner_cache_info()
+        assert info["size"] == 1 and info["max_size"] == 1
+        assert info["misses"] - before["misses"] == 4
+        assert info["evictions"] - before["evictions"] == 3
+        assert info["hits"] == before["hits"]
+    finally:
+        sim.set_runner_cache_limit(old_max)
+    for g, w in zip(got, want + want):
+        for k in RAW:
+            np.testing.assert_array_equal(g[k], w[k], err_msg=k)
+    # the survivor (last-run shape) is still cached: re-run is a hit
+    h0 = sim.runner_cache_info()["hits"]
+    run_batch([specs[1]], rates[None, :], tiny)
+    assert sim.runner_cache_info()["hits"] == h0 + 1
+
+
 def test_hash_rng_invariant_to_padding():
     """The injection hash depends only on (seed, t, node, stream)."""
     import jax.numpy as jnp
