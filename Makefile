@@ -3,7 +3,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test bench bench-smoke bench-sim bench-workloads \
-        bench-experiments examples
+        bench-experiments bench-synth bench-synth-full examples
 
 test:                 ## tier-1 verify
 	$(PY) -m pytest -x -q
@@ -23,6 +23,13 @@ bench-workloads:      ## workload grid (topologies x substrates x workloads)
 bench-experiments:    ## mixed static+workload grid through repro.experiments
 	$(PY) -m benchmarks.experiments_bench   # -> results/experiments_grid.csv
 
+bench-synth:          ## seeded mini topology search, < 60 s, Pareto CSV
+	$(PY) -m benchmarks.synth_bench --smoke   # -> results/synth_pareto.csv
+
+bench-synth-full:     ## full N=48 search (asserts FHT on front, 5x prefilter)
+	$(PY) -m benchmarks.synth_bench
+
 examples:             ## quickstart examples (experiment-API smoke)
 	$(PY) examples/quickstart.py
 	$(PY) examples/workload_quickstart.py
+	$(PY) examples/synth_quickstart.py

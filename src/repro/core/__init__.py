@@ -2,8 +2,11 @@
 topology evaluation pipeline (topologies, routing, simulator, cost models,
 and the topology-aware collective model that plugs into the training
 framework's roofline analyzer)."""
-from .topology import Topology, build, GENERATORS, N_CONSTRAINTS  # noqa
-from .routing import Routing, build_routing, dependency_graph_is_acyclic  # noqa
+from .topology import Topology, build, GENERATORS, N_CONSTRAINTS, \
+    make_topology, register_topology, unregister_topology, \
+    validate_edges  # noqa
+from .routing import Routing, build_routing, dependency_graph_is_acyclic, \
+    routing_for, routing_cache_info, routing_cache_clear  # noqa
 from .simulator import SimConfig, simulate, saturation_throughput, \
     zero_load_latency  # noqa
 from . import traffic, costmodel, linkmodel, placement, collectives  # noqa

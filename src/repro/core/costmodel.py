@@ -49,6 +49,16 @@ def absolute_throughput_gbps(topo: Topology, rel_throughput: float) -> float:
                  lm.rate_gbps(l_hat, topo.substrate))
 
 
+def wire_cost_mm(topo: Topology) -> float:
+    """Substrate wiring-resource proxy (Principle 3): total wire length
+    routed through the substrate — per-link wires (data plus the 12
+    UCIe non-data wires) times centre-to-centre link length, summed
+    over all links.  One of the three Pareto objectives the synthesis
+    engine (repro.synth) optimizes; unit is wire-mm."""
+    wires = data_wires(topo) + lm.NON_DATA_WIRES
+    return float(topo.link_lengths_mm().sum() * wires)
+
+
 def chiplet_area_mm2(topo: Topology) -> float:
     return topo.chiplet_area_mm2 + topo.radix * lm.PHY_AREA_MM2
 

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 
 import numpy as np
 import scipy.sparse as sp
@@ -277,19 +278,89 @@ def _build_routing_rooted(topo: Topology, root: int,
                    total_turns=n_turns)
 
 
+# ---------------------------------------------------------------------
+# routing cache — keyed on structural hash, never on names
+# ---------------------------------------------------------------------
+# The old lru_cache keyed on (name, n, substrate, ...) silently collided
+# for custom/synthesized topologies sharing a name (re-registering a
+# name, or two search candidates both called "rg_0", served each other's
+# stale routing tables).  The cache identity is now what routing
+# actually depends on: the structural hash (nodes + edges + positions)
+# plus substrate and chiplet area, which set link lengths and hop
+# latencies.  Names are labels only.
+
+_ROUTING_CACHE: dict[tuple, Routing] = {}
+_ROUTING_CACHE_MAX = int(os.environ.get("REPRO_ROUTING_CACHE_MAX", "4096"))
+_ROUTING_CACHE_STATS = dict(hits=0, misses=0, evictions=0)
+
+
+def routing_for(topo: Topology) -> Routing:
+    """Build-and-cache the deadlock-free routing for a topology.
+
+    Routing construction (Dijkstra over the dual graph) dominates
+    analytic evaluation time; benchmarks, the experiment planner and
+    the synthesis engine share this cache so a structure is only ever
+    routed once per process — regardless of what it is named.
+    """
+    key = (topo.structural_hash(), topo.substrate,
+           float(topo.chiplet_area_mm2))
+    hit = _ROUTING_CACHE.pop(key, None)
+    if hit is not None:
+        _ROUTING_CACHE[key] = hit          # LRU: move to the back
+        _ROUTING_CACHE_STATS["hits"] += 1
+        return hit
+    _ROUTING_CACHE_STATS["misses"] += 1
+    r = build_routing(topo)
+    _ROUTING_CACHE[key] = r
+    while len(_ROUTING_CACHE) > _ROUTING_CACHE_MAX:
+        _ROUTING_CACHE.pop(next(iter(_ROUTING_CACHE)))
+        _ROUTING_CACHE_STATS["evictions"] += 1
+    return r
+
+
+def routing_cache_info() -> dict:
+    """Routing-cache introspection, same shape idea as the simulator's
+    `runner_cache_info`: size/max plus monotonic hit/miss/eviction
+    counters (they survive `routing_cache_clear`)."""
+    return dict(size=len(_ROUTING_CACHE), max_size=_ROUTING_CACHE_MAX,
+                **_ROUTING_CACHE_STATS)
+
+
+def routing_cache_clear() -> None:
+    _ROUTING_CACHE.clear()
+
+
 @functools.lru_cache(maxsize=4096)
+def _cached_build(name: str, n: int, substrate: str, area: float,
+                  roles: str, hex_region: bool) -> Topology:
+    return build(name, n, substrate=substrate, chiplet_area_mm2=area,
+                 roles_scheme=roles, hex_region=hex_region)
+
+
 def cached_routing(name: str, n: int, substrate: str = "organic",
                    area: float = 74.0, roles: str = "homogeneous",
                    hex_region: bool = False) -> tuple[Topology, Routing]:
-    """Build-and-cache (topology, routing) for one evaluation cell.
+    """Build-and-cache (topology, routing) for one *named* evaluation
+    cell.  Topology construction is memoized per name cell (cheap,
+    needed for registered generators whose output may change between
+    registrations — the build is re-validated, not the cache, in that
+    case); the expensive routing is cached by `routing_for` on the
+    structural hash, so same-named cells with different structures can
+    no longer collide."""
+    if name in _CUSTOM():
+        # registered generators can be re-registered: never serve a
+        # memoized build for them, rebuild (cheap) and let routing_for
+        # key on the structure.
+        topo = build(name, n, substrate=substrate, chiplet_area_mm2=area,
+                     roles_scheme=roles, hex_region=hex_region)
+    else:
+        topo = _cached_build(name, n, substrate, area, roles, hex_region)
+    return topo, routing_for(topo)
 
-    Routing construction (Dijkstra over the dual graph) dominates
-    analytic evaluation time; benchmarks and the sweep engine share this
-    cache so a cell is only ever built once per process.
-    """
-    topo = build(name, n, substrate=substrate, chiplet_area_mm2=area,
-                 roles_scheme=roles, hex_region=hex_region)
-    return topo, build_routing(topo)
+
+def _CUSTOM():
+    from .topology import CUSTOM_GENERATORS
+    return CUSTOM_GENERATORS
 
 
 def dependency_graph_is_acyclic(r: Routing) -> bool:

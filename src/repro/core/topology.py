@@ -30,6 +30,7 @@ structural properties are validated in tests/test_topology.py.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from typing import Callable
 
@@ -39,6 +40,15 @@ import scipy.sparse.csgraph as csgraph
 
 from . import placement as pl
 from .linkmodel import CHIPLET_AREA_MM2
+
+
+def link_range_from_pitch(dist_pitch) -> np.ndarray:
+    """The paper's §III-B link-range convention, shared by
+    `Topology.link_ranges` and the synthesis design space
+    (`synth.space.candidate_pairs`): round(centre distance in pitch
+    units) - 1, floored at 0 — one copy, so generation and the
+    feasibility filter can never disagree on the budget."""
+    return np.maximum(np.rint(np.asarray(dist_pitch)).astype(int) - 1, 0)
 
 
 @dataclasses.dataclass
@@ -75,10 +85,9 @@ class Topology:
 
     def link_ranges(self) -> np.ndarray:
         """Number of intermediate chiplets a link stretches across
-        (paper §III-B definition; adjacency -> 0).  Geometric estimate:
-        round(centre distance / pitch) - 1, floor 0."""
-        d = self.link_lengths_mm() / self.pitch_mm
-        return np.maximum(np.rint(d).astype(int) - 1, 0)
+        (paper §III-B definition; adjacency -> 0)."""
+        return link_range_from_pitch(self.link_lengths_mm()
+                                     / self.pitch_mm)
 
     # ---- graph properties ---------------------------------------------
     def adjacency(self) -> sp.csr_matrix:
@@ -115,6 +124,23 @@ class Topology:
         ncomp, _ = csgraph.connected_components(self.adjacency())
         return ncomp == 1
 
+    def structural_hash(self) -> str:
+        """Stable hash of the topology *structure and geometry* — node
+        count, canonical undirected edge set, and centre positions
+        (quantized to 1e-6 pitch).  Two topologies with equal hashes
+        route identically for a given (substrate, area), so this is the
+        cache identity for `routing.routing_for` — names are labels,
+        not identities (synthesized topologies may share or reuse
+        names)."""
+        e = np.sort(np.asarray(self.edges, np.int64), axis=1)
+        e = e[np.lexsort((e[:, 1], e[:, 0]))]
+        q = np.rint(np.asarray(self.pos, np.float64) * 1e6).astype(np.int64)
+        h = hashlib.sha256()
+        h.update(np.int64(self.n).tobytes())
+        h.update(e.tobytes())
+        h.update(q.tobytes())
+        return h.hexdigest()
+
 
 # =====================================================================
 # helpers
@@ -123,6 +149,72 @@ class Topology:
 def _dedupe(edges: list[tuple[int, int]]) -> np.ndarray:
     es = {(min(a, b), max(a, b)) for a, b in edges if a != b}
     return np.array(sorted(es), dtype=np.int32)
+
+
+def validate_edges(n: int, edges: np.ndarray, name: str = "topology",
+                   require_connected: bool = True) -> np.ndarray:
+    """Validate a raw undirected edge list against graph invariants.
+
+    The synthesis engine (repro.synth) feeds `build`/`make_topology`
+    arbitrary generated edge lists, so the invariants the hand-written
+    generators maintain by construction are enforced here with clear
+    errors: indices in range, no self-loops, no duplicate undirected
+    edges, and (by default) a single connected component.  Returns the
+    edges as a canonical int32 [E, 2] array.
+    """
+    e = np.asarray(edges, dtype=np.int64)
+    if e.size == 0:
+        e = e.reshape(0, 2)
+    if e.ndim != 2 or e.shape[1] != 2:
+        raise ValueError(f"{name}: edges must be [E, 2], got {e.shape}")
+    if e.size and (e.min() < 0 or e.max() >= n):
+        bad = e[(e[:, 0] < 0) | (e[:, 0] >= n)
+                | (e[:, 1] < 0) | (e[:, 1] >= n)][0]
+        raise ValueError(f"{name}: edge {tuple(int(x) for x in bad)} "
+                         f"out of range for N={n}")
+    loops = e[e[:, 0] == e[:, 1]]
+    if len(loops):
+        raise ValueError(f"{name}: self-loop at node {int(loops[0, 0])}")
+    und = np.sort(e, axis=1)
+    uniq, counts = np.unique(und, axis=0, return_counts=True)
+    if (counts > 1).any():
+        dup = uniq[counts > 1][0]
+        raise ValueError(f"{name}: duplicate edge {tuple(int(x) for x in dup)}")
+    if require_connected:
+        if len(e) < n - 1:
+            raise ValueError(f"{name}: disconnected graph "
+                             f"({len(e)} edges < N-1={n - 1})")
+        data = np.ones(len(e) * 2)
+        ij = np.concatenate([e, e[:, ::-1]])
+        adj = sp.csr_matrix((data, (ij[:, 0], ij[:, 1])), shape=(n, n))
+        ncomp, _ = csgraph.connected_components(adj)
+        if ncomp != 1:
+            raise ValueError(f"{name}: disconnected graph "
+                             f"({ncomp} components)")
+    return np.asarray(und[np.lexsort((und[:, 1], und[:, 0]))],
+                      dtype=np.int32)
+
+
+def make_topology(name: str, pos: np.ndarray, edges: np.ndarray,
+                  substrate: str = "organic",
+                  chiplet_area_mm2: float = CHIPLET_AREA_MM2,
+                  roles_scheme: str = "homogeneous") -> Topology:
+    """Build a validated `Topology` from raw position/edge arrays.
+
+    This is the front door for *custom* topologies (the synthesis
+    engine, notebooks, registered generators): the same validation as
+    `build`, with positions given directly instead of via a generator.
+    """
+    pos = np.asarray(pos, dtype=np.float64)
+    n = len(pos)
+    if pos.ndim != 2 or pos.shape[1] != 2:
+        raise ValueError(f"{name}: pos must be [N, 2], got {pos.shape}")
+    edges = validate_edges(n, edges, name=name)
+    topo = Topology(name=name, n=n, pos=pos, edges=edges,
+                    substrate=substrate,
+                    chiplet_area_mm2=chiplet_area_mm2)
+    topo.roles = pl.assign_roles(pos, roles_scheme)
+    return topo
 
 
 def fold_chain(chain: list[int]) -> list[tuple[int, int]]:
@@ -538,20 +630,66 @@ N_CONSTRAINTS = {
     "cluscross_v2": lambda n: all(d % 2 == 0 for d in pl.grid_dims(n)),
 }
 
+#: user/synth-registered generators, consulted by `build` after the
+#: built-in table.  A custom generator is `gen(n, **kw)` returning either
+#: a `(name, pos, edges)` triple (the built-in convention) or a full
+#: `Topology` (re-stamped with the requested substrate/area/roles).
+CUSTOM_GENERATORS: dict[str, Callable] = {}
+
+
+def register_topology(name: str, generator: Callable,
+                      overwrite: bool = False) -> None:
+    """Register a custom topology generator under `name` for `build`.
+
+    Registered names live alongside the paper's Table-III registry: the
+    experiment planner, `cached_routing` and benchmarks resolve them
+    transparently.  Routing caching keys on the *structural hash* of
+    what the generator emits, so re-registering a name with a different
+    structure cannot serve stale routing (see routing.routing_for).
+    """
+    if name in GENERATORS:
+        raise ValueError(f"{name!r} is a built-in Table-III topology; "
+                         "pick a different name")
+    if name in CUSTOM_GENERATORS and not overwrite:
+        raise ValueError(f"{name!r} already registered; pass "
+                         "overwrite=True to replace it")
+    if not callable(generator):
+        raise TypeError(f"generator for {name!r} must be callable")
+    CUSTOM_GENERATORS[name] = generator
+
+
+def unregister_topology(name: str) -> None:
+    CUSTOM_GENERATORS.pop(name, None)
+
 
 def build(name: str, n: int, substrate: str = "organic",
           chiplet_area_mm2: float = CHIPLET_AREA_MM2,
           roles_scheme: str = "homogeneous", hex_region: bool = False,
           ) -> Topology:
-    if name not in GENERATORS:
-        raise KeyError(f"unknown topology {name!r}; "
-                       f"choose from {sorted(GENERATORS)}")
-    if name in N_CONSTRAINTS and not N_CONSTRAINTS[name](n):
-        raise ValueError(f"{name} does not support N={n}")
-    kw = {"hex_region": hex_region} if name in (
-        "hexamesh", "folded_hexa_torus") else {}
-    name_, pos, edges = GENERATORS[name](n, **kw)
-    topo = Topology(name=name_, n=n, pos=pos, edges=edges,
+    if name in GENERATORS:
+        if name in N_CONSTRAINTS and not N_CONSTRAINTS[name](n):
+            raise ValueError(f"{name} does not support N={n}")
+        kw = {"hex_region": hex_region} if name in (
+            "hexamesh", "folded_hexa_torus") else {}
+        name_, pos, edges = GENERATORS[name](n, **kw)
+    elif name in CUSTOM_GENERATORS:
+        out = CUSTOM_GENERATORS[name](n)
+        if isinstance(out, Topology):
+            if out.n != n:
+                raise ValueError(f"{name}: generator returned N={out.n}, "
+                                 f"requested N={n}")
+            name_, pos, edges = out.name, out.pos, out.edges
+        else:
+            name_, pos, edges = out
+    else:
+        raise KeyError(f"unknown topology {name!r}; choose from "
+                       f"{sorted(GENERATORS)} or register_topology() it")
+    if len(pos) != n:
+        raise ValueError(f"{name_}: generator emitted {len(pos)} "
+                         f"positions, requested N={n}")
+    edges = validate_edges(len(pos), edges, name=name_)
+    topo = Topology(name=name_, n=n, pos=np.asarray(pos, np.float64),
+                    edges=edges,
                     substrate=substrate, chiplet_area_mm2=chiplet_area_mm2)
-    topo.roles = pl.assign_roles(pos, roles_scheme)
+    topo.roles = pl.assign_roles(topo.pos, roles_scheme)
     return topo

@@ -26,7 +26,8 @@ independent of how scenarios are grouped.
 from .execute import engine_for, execute, run
 from .frame import COLUMNS, ResultFrame, scenario_row
 from .io import SCHEMA_VERSION, read_json, write_csv, write_json
-from .plan import Bucket, BucketKey, Plan, PlannedScenario, plan
+from .plan import (Bucket, BucketKey, Plan, PlannedScenario, plan,
+                   resolve_topology)
 from .scenario import (CustomTraffic, Experiment, ExplicitRates,
                        RatePolicy, SaturationGrid, Scenario,
                        scenario_from_case)
@@ -35,6 +36,7 @@ __all__ = [
     "Scenario", "Experiment", "CustomTraffic", "SaturationGrid",
     "ExplicitRates", "RatePolicy", "scenario_from_case",
     "plan", "Plan", "PlannedScenario", "Bucket", "BucketKey",
+    "resolve_topology",
     "execute", "run", "engine_for",
     "ResultFrame", "COLUMNS", "scenario_row",
     "SCHEMA_VERSION", "write_csv", "write_json", "read_json",

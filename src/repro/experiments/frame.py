@@ -39,8 +39,9 @@ def _identity_row(exp: Experiment, s: Scenario, status: str,
                   error: str = "") -> dict:
     row = dict.fromkeys(COLUMNS)
     row.update(experiment=exp.name, backend=exp.backend, status=status,
-               topology=s.topology, n=s.n, substrate=s.substrate,
-               roles=s.roles, area_mm2=s.area, traffic=s.traffic_name,
+               topology=s.topology_name, n=s.n,
+               substrate=s.resolved_substrate, roles=s.roles,
+               area_mm2=s.resolved_area, traffic=s.traffic_name,
                kind=s.kind, rates=s.rates.describe(), error=error)
     row.update(dict(s.tags))
     return row

@@ -25,8 +25,10 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import placement as pl
+from repro.core import topology as T
 from repro.core import traffic as TR
-from repro.core.routing import cached_routing
+from repro.core.routing import cached_routing, routing_for
 from repro.core.simulator import SimSpec, make_spec
 from repro.sweep.engine import SweepEngine, _round_up
 from repro.sweep.padding import PadShape
@@ -90,6 +92,51 @@ class Plan:
         return "\n".join(lines)
 
 
+def resolve_topology(scenario: Scenario):
+    """(topo, routing) for a scenario's topology source.
+
+    Registry names go through `cached_routing`; `Topology` objects and
+    generator callables are validated here and routed via the
+    structural-hash cache (`routing_for`) — name collisions between
+    synthesized candidates are harmless by construction.
+
+    A `Topology` object keeps its own substrate/area unless the
+    scenario names them explicitly (`Scenario.resolved_substrate`), in
+    which case it is re-stamped; a non-default `roles` scheme is
+    re-applied to it so the result row's `roles` column always
+    describes the traffic actually run — with the default scheme the
+    object's own (possibly hand-assigned) roles are kept.
+    """
+    s = scenario
+    substrate, area = s.resolved_substrate, s.resolved_area
+    if isinstance(s.topology, str):
+        return cached_routing(s.topology, s.n, substrate, area, s.roles)
+    src = s.topology if isinstance(s.topology, T.Topology) \
+        else s.topology(s.n)            # generator callable
+    if isinstance(src, T.Topology):
+        topo = src
+        if topo.n != s.n:
+            raise ValueError(f"scenario n={s.n} != topology n={topo.n} "
+                             f"({topo.name})")
+        if topo.substrate != substrate or \
+                topo.chiplet_area_mm2 != area:
+            topo = dataclasses.replace(topo, substrate=substrate,
+                                       chiplet_area_mm2=area)
+        if s.roles != "homogeneous":
+            topo = dataclasses.replace(
+                topo, roles=pl.assign_roles(topo.pos, s.roles))
+        T.validate_edges(topo.n, topo.edges, name=topo.name)
+    else:                               # generator returned (name, pos, edges)
+        name, pos, edges = src
+        topo = T.make_topology(name, pos, edges, substrate=substrate,
+                               chiplet_area_mm2=area,
+                               roles_scheme=s.roles)
+        if topo.n != s.n:
+            raise ValueError(f"scenario n={s.n} != generated n={topo.n} "
+                             f"({topo.name})")
+    return topo, routing_for(topo)
+
+
 def _resolve_traffic(scenario: Scenario, topo, meas: int):
     """(static matrix | schedule mean, fitted Schedule | None)."""
     tr = scenario.traffic
@@ -132,11 +179,10 @@ def plan(experiment: Experiment, engine: SweepEngine | None = None,
     skipped: list = []
     for i, s in enumerate(experiment.scenarios):
         if not s.valid:
-            skipped.append((i, f"{s.topology} does not support N={s.n} "
-                               "(topology.N_CONSTRAINTS)"))
+            skipped.append((i, f"{s.topology_name} does not support "
+                               f"N={s.n} (topology.N_CONSTRAINTS)"))
             continue
-        topo, routing = cached_routing(s.topology, s.n, s.substrate,
-                                       s.area, s.roles)
+        topo, routing = resolve_topology(s)
         tm, schedule = _resolve_traffic(s, topo, meas)
         analytic = routing.saturation_rate(tm)
         spec = sched_spec = rates = None

@@ -110,12 +110,27 @@ def traffic_name(traffic) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One evaluation cell: topology x substrate x traffic x rates."""
-    topology: str
+    """One evaluation cell: topology x substrate x traffic x rates.
+
+    `topology` is a registry name (built-in Table III or
+    `topology.register_topology`-ed), a first-class `Topology` object
+    (e.g. a synthesized candidate from `repro.synth`), or a generator
+    callable `n -> Topology | (name, pos, edges)`.  Non-string
+    topologies are validated and routed at plan time via the
+    structural-hash routing cache, so arbitrarily many synthesized
+    scenarios can share names without colliding.
+
+    `substrate`/`area` default to None = *inherit*: a `Topology`
+    object keeps its own substrate and chiplet area (a glass candidate
+    stays glass), registry names and generator callables fall back to
+    the paper defaults (organic, 74 mm^2).  Pass explicit values to
+    re-stamp a `Topology` onto a different substrate.
+    """
+    topology: object                 # str | Topology | callable(n)
     n: int
-    substrate: str = "organic"
+    substrate: str | None = None     # None = inherit / organic
     traffic: object = "uniform"      # str | CustomTraffic | Workload
-    area: float = 74.0
+    area: float | None = None        # None = inherit / 74.0
     roles: str = "homogeneous"
     rates: RatePolicy = SaturationGrid()
     fit_schedule: bool = True        # fit workloads to the meas. window
@@ -137,14 +152,41 @@ class Scenario:
         return traffic_name(self.traffic)
 
     @property
+    def topology_name(self) -> str:
+        """Label for result rows: the registry name, a `Topology`'s own
+        name, or a generator callable's name attribute."""
+        t = self.topology
+        if isinstance(t, str):
+            return t
+        name = getattr(t, "name", "")
+        return str(name) if name else getattr(t, "__name__", "custom")
+
+    @property
+    def resolved_substrate(self) -> str:
+        if self.substrate is not None:
+            return self.substrate
+        if isinstance(self.topology, T.Topology):
+            return self.topology.substrate
+        return "organic"
+
+    @property
+    def resolved_area(self) -> float:
+        if self.area is not None:
+            return self.area
+        if isinstance(self.topology, T.Topology):
+            return self.topology.chiplet_area_mm2
+        return 74.0
+
+    @property
     def valid(self) -> bool:
-        return not (self.topology in T.N_CONSTRAINTS
+        return not (isinstance(self.topology, str)
+                    and self.topology in T.N_CONSTRAINTS
                     and not T.N_CONSTRAINTS[self.topology](self.n))
 
     @property
     def label(self) -> str:
-        return (f"{self.topology}/n{self.n}/{self.substrate}/"
-                f"{self.traffic_name}")
+        return (f"{self.topology_name}/n{self.n}/"
+                f"{self.resolved_substrate}/{self.traffic_name}")
 
 
 def scenario_from_case(case, traffic=None,

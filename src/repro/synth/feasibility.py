@@ -1,0 +1,96 @@
+"""Feasibility filter (DESIGN.md §11): the paper's design principles
+as candidate checks, applied before any routing or simulation.
+
+The paper distils FoldedHexaTorus from three principles.  Principle 1
+(low diameter) is an *objective* — the Pareto front rewards it via
+zero-load latency — but Principles 2 and 3 are *constraints* a
+substrate either meets or does not, so they prune the design space:
+
+  * **Principle 2 — link-range budget**: every link spans at most
+    `max_link_range` intermediate chiplets (the paper argues range > 1
+    both slows the link and congests the wiring layers);
+  * **substrate rate floor**: the longest link must retain at least
+    `min_rate_fraction` of the maximum per-wire rate on this
+    substrate's Fig.-2 curve (`linkmodel.rate_fraction`) — the
+    mechanism that zeroes Torus/ClusCross-style wrap links at scale;
+  * **Principle 3 — wire budget**: the radix must leave a positive
+    per-link data-wire budget after the UCIe overhead
+    (`costmodel.data_wires`), optionally capped (`max_radix`), and the
+    total substrate wire cost may be bounded (`max_wire_cost_mm`).
+
+Connectivity / well-formedness is not re-checked here — `make_topology`
+and `topology.build` already enforce it at construction time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import linkmodel as lm
+from repro.core.topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class FeasibilityCriteria:
+    max_link_range: int = 1          # Principle 2
+    min_rate_fraction: float = 0.25  # substrate floor on the Fig.-2 curve
+    max_radix: int | None = 8        # Principle 3: per-chiplet PHY budget
+    min_data_wires: int = 1          # Principle 3: wires left per link
+    max_wire_cost_mm: float | None = None
+
+    def max_link_mm(self, substrate: str) -> float:
+        return max_feasible_link_mm(substrate, self.min_rate_fraction)
+
+
+@functools.lru_cache(maxsize=64)
+def max_feasible_link_mm(substrate: str,
+                         min_rate_fraction: float) -> float:
+    """Longest link (mm) that still meets the rate floor on this
+    substrate — the inverse of the monotone tail of the Fig.-2 curve,
+    read off a fine grid (cached: `check` calls this once per
+    generated candidate)."""
+    grid = np.linspace(0.0, lm.MAX_LINK_LENGTH_MM, 7001)
+    ok = grid[lm.rate_fraction(grid, substrate) >= min_rate_fraction]
+    return float(ok.max()) if len(ok) else 0.0
+
+
+def check(topo: Topology,
+          crit: FeasibilityCriteria = FeasibilityCriteria()) -> list[str]:
+    """Reasons this candidate is infeasible; empty list == feasible."""
+    reasons = []
+    ranges = topo.link_ranges()
+    if len(ranges) and int(ranges.max()) > crit.max_link_range:
+        reasons.append(f"link-range {int(ranges.max())} > "
+                       f"{crit.max_link_range} (Principle 2)")
+    cap = crit.max_link_mm(topo.substrate)
+    lmax = topo.max_link_length_mm()
+    if lmax > cap + 1e-9:
+        reasons.append(f"max link {lmax:.1f} mm > {cap:.1f} mm "
+                       f"({topo.substrate} rate floor "
+                       f"{crit.min_rate_fraction:g})")
+    if crit.max_radix is not None and topo.radix > crit.max_radix:
+        reasons.append(f"radix {topo.radix} > {crit.max_radix} "
+                       "(Principle 3)")
+    if cm.data_wires(topo) < crit.min_data_wires:
+        reasons.append(f"data wires {cm.data_wires(topo)} < "
+                       f"{crit.min_data_wires} at radix {topo.radix} "
+                       "(Principle 3)")
+    if crit.max_wire_cost_mm is not None and \
+            cm.wire_cost_mm(topo) > crit.max_wire_cost_mm:
+        reasons.append(f"wire cost {cm.wire_cost_mm(topo):.0f} wire-mm "
+                       f"> {crit.max_wire_cost_mm:.0f}")
+    return reasons
+
+
+def filter_feasible(topos, crit: FeasibilityCriteria = FeasibilityCriteria()
+                    ) -> tuple[list, list]:
+    """Split candidates into (feasible, [(topo, reasons), ...])."""
+    feasible, rejected = [], []
+    for t in topos:
+        reasons = check(t, crit)
+        (feasible.append(t) if not reasons
+         else rejected.append((t, reasons)))
+    return feasible, rejected

@@ -1,0 +1,401 @@
+"""Topology synthesis engine (DESIGN.md §11): design-space generators,
+feasibility filter, Pareto utilities, the seeded search (acceptance:
+FHT on its own Pareto front, >=5x analytic prefilter), custom-topology
+registry/validation hardening, and the structural-hash routing cache.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.experiments as X
+import repro.synth as S
+from repro.core import costmodel as cm
+from repro.core import routing as R
+from repro.core import topology as T
+from repro.core.routing import (build_routing, cached_routing,
+                                dependency_graph_is_acyclic, routing_for,
+                                routing_cache_info)
+from repro.core.simulator import SimConfig
+
+
+# =====================================================================
+# build-time validation hardening (satellite 1)
+# =====================================================================
+
+POS3 = np.array([[0.0, 0.0], [1.0, 0.0], [2.0, 0.0]])
+
+
+def test_make_topology_rejects_self_loops():
+    with pytest.raises(ValueError, match="self-loop"):
+        T.make_topology("bad", POS3, [(0, 1), (1, 2), (2, 2)])
+
+
+def test_make_topology_rejects_duplicate_edges():
+    with pytest.raises(ValueError, match="duplicate edge"):
+        T.make_topology("bad", POS3, [(0, 1), (1, 2), (2, 1)])
+
+
+def test_make_topology_rejects_disconnected():
+    pos = np.array([[0.0, 0], [1, 0], [2, 0], [3, 0]])
+    with pytest.raises(ValueError, match="disconnected"):
+        T.make_topology("bad", pos, [(0, 1), (2, 3)])
+
+
+def test_make_topology_rejects_out_of_range():
+    with pytest.raises(ValueError, match="out of range"):
+        T.make_topology("bad", POS3, [(0, 1), (1, 3)])
+
+
+def test_build_validates_registered_generators():
+    T.register_topology(
+        "bad_gen", lambda n: ("bad_gen", POS3[:n],
+                              [(i, i) for i in range(n)]), overwrite=True)
+    try:
+        with pytest.raises(ValueError, match="self-loop"):
+            T.build("bad_gen", 3)
+    finally:
+        T.unregister_topology("bad_gen")
+
+
+def test_build_rejects_generator_node_count_mismatch():
+    pos25 = np.stack([np.arange(25.0) % 5, np.arange(25.0) // 5], axis=-1)
+    ring25 = [(i, (i + 1) % 25) for i in range(25)]
+    T.register_topology("wrong_n", lambda n: ("wrong_n", pos25, ring25),
+                        overwrite=True)
+    try:
+        with pytest.raises(ValueError, match="25 positions"):
+            T.build("wrong_n", 16)
+    finally:
+        T.unregister_topology("wrong_n")
+
+
+def test_register_topology_guards():
+    with pytest.raises(ValueError, match="built-in"):
+        T.register_topology("mesh", lambda n: None)
+    T.register_topology("reg_guard_demo", lambda n: None, overwrite=True)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            T.register_topology("reg_guard_demo", lambda n: None)
+    finally:
+        T.unregister_topology("reg_guard_demo")
+
+
+def test_registered_generator_resolves_through_build_and_experiments():
+    def gen(n):
+        base = T.build("mesh", n)
+        return ("wrapped_mesh", base.pos, base.edges)
+    T.register_topology("wrapped_mesh", gen, overwrite=True)
+    try:
+        topo = T.build("wrapped_mesh", 16)
+        assert topo.structural_hash() == T.build("mesh", 16).structural_hash()
+        frame = X.run(X.Experiment([X.Scenario("wrapped_mesh", 16)],
+                                   backend="analytic"))
+        assert frame.rows[0]["status"] == "ok"
+        assert frame.rows[0]["topology"] == "wrapped_mesh"
+    finally:
+        T.unregister_topology("wrapped_mesh")
+
+
+# =====================================================================
+# structural-hash routing cache (satellite 2)
+# =====================================================================
+
+def test_structural_hash_ignores_name_and_edge_order():
+    a = T.build("mesh", 16)
+    b = dataclasses.replace(a, name="renamed",
+                            edges=a.edges[::-1].copy())
+    assert a.structural_hash() == b.structural_hash()
+    c = T.build("folded_torus", 16)
+    assert a.structural_hash() != c.structural_hash()
+
+
+def test_cached_routing_no_collision_for_reregistered_name():
+    """The old (name, n, substrate) key served stale routing when a
+    custom name was re-registered with a different structure."""
+    T.register_topology("clash", lambda n: T.build("mesh", n),
+                        overwrite=True)
+    try:
+        t1, r1 = cached_routing("clash", 16)
+        T.register_topology("clash", lambda n: T.build("folded_torus", n),
+                            overwrite=True)
+        t2, r2 = cached_routing("clash", 16)
+        assert t1.structural_hash() != t2.structural_hash()
+        assert r1.n_channels != r2.n_channels or \
+            not np.array_equal(r1.table, r2.table)
+    finally:
+        T.unregister_topology("clash")
+
+
+def test_routing_cache_shares_entries_across_names():
+    info0 = routing_cache_info()
+    base = T.build("mesh", 20)
+    alias = dataclasses.replace(base, name="mesh_alias")
+    r1 = routing_for(base)
+    r2 = routing_for(alias)
+    assert r1 is r2                      # same structure, one entry
+    info1 = routing_cache_info()
+    assert info1["hits"] >= info0["hits"] + 1
+    assert set(info1) >= {"size", "max_size", "hits", "misses",
+                          "evictions"}
+
+
+# =====================================================================
+# design space (synth.space)
+# =====================================================================
+
+def test_fold_mask_recovers_table_iii_points():
+    """Mesh / FoldedTorus / HexaMesh / FHT are fold-mask points."""
+    pairs = [(("grid", ("path", "path")), "mesh"),
+             (("grid", ("folded", "folded")), "folded_torus"),
+             (("brick", ("path", "path", "path")), "hexamesh"),
+             (("brick", ("folded", "folded", "folded")),
+              "folded_hexa_torus")]
+    for (family, modes), name in pairs:
+        fm = S.fold_mask_topology(48, family, modes)
+        assert fm.structural_hash() == T.build(name, 48).structural_hash()
+
+
+def test_fold_mask_variants_enumerate_and_validate():
+    variants = S.fold_mask_variants(16, families=("grid",))
+    assert len(variants) == 9            # 3 modes ^ 2 axes
+    assert len({t.structural_hash() for t in variants}) == 9
+    for t in variants:
+        assert t.is_connected()
+
+
+@pytest.mark.parametrize("seed", [0, 7, 123])
+def test_random_geometric_invariants(seed):
+    t = S.random_geometric(24, seed, max_degree=5, max_range=1)
+    assert t is not None
+    assert t.is_connected()
+    assert t.degrees().max() <= 5
+    assert t.link_ranges().max() <= 1
+    again = S.random_geometric(24, seed, max_degree=5, max_range=1)
+    assert t.structural_hash() == again.structural_hash()  # deterministic
+
+
+def test_candidate_pairs_match_link_ranges_convention():
+    """Generation and the feasibility filter must share ONE link-range
+    convention: every admitted pair, built as an edge, must satisfy
+    the same Topology.link_ranges budget it was admitted under."""
+    t = S.random_geometric(24, 5, family="brick", max_degree=6,
+                           max_range=1)
+    assert t.link_ranges().max() <= 1
+    pairs = S.candidate_pairs(t.pos, max_range=0)
+    adj_only = T.make_topology("adj", t.pos, pairs)
+    assert adj_only.link_ranges().max() == 0
+
+
+def test_perturb_preserves_invariants():
+    base = S.random_geometric(16, 3, max_degree=5, max_range=1)
+    child = S.perturb(base, seed=11, max_degree=5, max_range=1)
+    assert child is not None
+    assert child.structural_hash() != base.structural_hash()
+    assert child.is_connected()
+    assert child.degrees().max() <= 5
+    assert child.link_ranges().max() <= 1
+
+
+# =====================================================================
+# feasibility filter (the three design principles)
+# =====================================================================
+
+def test_feasibility_accepts_fht_rejects_torus_wraps():
+    crit = S.FeasibilityCriteria()
+    assert S.check(T.build("folded_hexa_torus", 48), crit) == []
+    reasons = S.check(T.build("torus", 48), crit)
+    assert any("link-range" in r for r in reasons)
+
+
+def test_feasibility_radix_and_wire_budget():
+    crit = S.FeasibilityCriteria(max_radix=4)
+    reasons = S.check(T.build("octamesh", 48), crit)
+    assert any("radix" in r for r in reasons)
+    assert cm.wire_cost_mm(T.build("mesh", 16)) > 0
+
+
+def test_max_feasible_link_monotone_in_rate_floor():
+    for sub in ("organic", "glass"):
+        l_lo = S.max_feasible_link_mm(sub, 0.9)
+        l_hi = S.max_feasible_link_mm(sub, 0.25)
+        assert 0 < l_lo < l_hi <= 70.0
+    # glass holds rate longer than organic (Fig. 2)
+    assert S.max_feasible_link_mm("glass", 0.9) > \
+        S.max_feasible_link_mm("organic", 0.9)
+
+
+# =====================================================================
+# Pareto utilities
+# =====================================================================
+
+def test_pareto_mask_basics():
+    #               thr(max)  lat(min)  wire(min)
+    pts = np.array([[10.0,     5.0,     100.0],    # front
+                    [12.0,     6.0,     120.0],    # front (best thr)
+                    [9.0,      7.0,     140.0],    # beaten >5% everywhere
+                    [9.9,      5.2,     104.0],    # within 5% of 0
+                    [1.0,      50.0,    500.0]])   # far dominated
+    mx = (True, False, False)
+    mask = S.pareto_mask(pts, mx)
+    assert mask.tolist() == [True, True, False, False, False]
+    eps = S.pareto_mask(pts, mx, eps=0.05)
+    assert eps.tolist() == [True, True, False, True, False]
+    assert S.pareto_front(pts, mx).tolist() == [0, 1]
+
+
+def test_pareto_mask_nan_rows_excluded():
+    pts = np.array([[1.0, 1.0], [np.nan, 1.0]])
+    mask = S.pareto_mask(pts, (True, False))
+    assert mask.tolist() == [True, False]
+
+
+# =====================================================================
+# deadlock-freedom over the search space (satellite 3)
+# =====================================================================
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n=st.sampled_from([12, 16, 18, 24]),
+       max_degree=st.integers(3, 6))
+def test_routing_is_deadlock_free_on_random_topologies(seed, n,
+                                                       max_degree):
+    """The search space relies on build_routing being deadlock-free and
+    complete on ANY connected degree-bounded topology: the channel
+    dependency graph must be acyclic and every pair reachable."""
+    topo = S.random_geometric(n, seed, max_degree=max_degree, max_range=1)
+    if topo is None:                     # degree bound too tight to span
+        return
+    r = build_routing(topo)
+    assert dependency_graph_is_acyclic(r)
+    hops = r.restricted_hops()           # raises on dead ends / livelock
+    off = ~np.eye(n, dtype=bool)
+    assert (hops[off] >= 1).all()
+    assert hops.max() <= 4 * n
+
+
+# =====================================================================
+# custom topologies through the experiment pipeline
+# =====================================================================
+
+def test_scenario_accepts_topology_object_bitwise_vs_name():
+    cfg = SimConfig(cycles=240, warmup=80)
+    topo = T.build("mesh", 16)
+    frame = X.run(X.Experiment(
+        [X.Scenario("mesh", 16, rates=X.ExplicitRates((0.1, 0.3))),
+         X.Scenario(topo, 16, rates=X.ExplicitRates((0.1, 0.3)))],
+        cfg=cfg, name="obj_vs_name"))
+    a, b = frame.results
+    np.testing.assert_array_equal(a["throughput"], b["throughput"])
+    np.testing.assert_array_equal(a["latency"], b["latency"])
+    assert frame.rows[1]["topology"] == "mesh"
+
+
+def test_scenario_accepts_generator_callable():
+    frame = X.run(X.Experiment(
+        [X.Scenario(lambda n: T.build("folded_torus", n), 16)],
+        backend="analytic"))
+    row = frame.rows[0]
+    assert row["status"] == "ok" and row["radix"] == 4
+
+
+def test_scenario_topology_object_applies_roles_scheme():
+    """A non-default roles scheme must bind to Topology-object scenarios
+    exactly as it does to registry names (the result row reports it)."""
+    exp = X.Experiment([X.Scenario(T.build("mesh", 16), 16,
+                                   roles="hetero_cm",
+                                   traffic="hetero_mix")],
+                       backend="analytic")
+    ps = X.plan(exp).buckets[0].items[0]
+    assert (ps.topo.roles == "M").any()
+    # same traffic matrix as the registry-name path
+    name_ps = X.plan(X.Experiment(
+        [X.Scenario("mesh", 16, roles="hetero_cm",
+                    traffic="hetero_mix")],
+        backend="analytic")).buckets[0].items[0]
+    np.testing.assert_array_equal(ps.traffic, name_ps.traffic)
+
+
+def test_scenario_topology_n_mismatch_raises():
+    with pytest.raises(ValueError, match="n=25 != topology n=16"):
+        X.plan(X.Experiment([X.Scenario(T.build("mesh", 16), 25)],
+                            backend="analytic"))
+
+
+# =====================================================================
+# the search driver: acceptance criteria
+# =====================================================================
+
+ACCEPT_CFG = S.SearchConfig(
+    n=48, substrate="organic", seed=0,
+    n_random=16, generations=2, offspring=10, sim_top=3, n_rates=3,
+    cfg=SimConfig(cycles=700, warmup=250))
+
+
+@pytest.fixture(scope="module")
+def accept_result():
+    return S.run_search(ACCEPT_CFG)
+
+
+def test_search_fht_on_own_pareto_front(accept_result):
+    """Acceptance: seeded search at N=48 (organic) places FHT on (or
+    within 5 % of) the Pareto front of its own candidate pool."""
+    res = accept_result
+    assert any(c.topo.name == "folded_hexa_torus" for c in res.simulated)
+    assert res.on_front("folded_hexa_torus", eps=0.05)
+
+
+def test_search_prefilter_cuts_sims_5x(accept_result):
+    """Acceptance: the analytic prefilter cuts cycle-sim evaluations by
+    >= 5x vs simulating every feasible candidate."""
+    res = accept_result
+    assert res.stats["n_simulated"] >= 1
+    assert res.prefilter_ratio >= 5.0
+
+
+def test_search_pool_and_front_sanity(accept_result):
+    res = accept_result
+    s = res.stats
+    assert s["n_generated"] == s["n_feasible"] + s["n_infeasible"] + \
+        s["n_duplicate"]
+    assert s["n_feasible"] >= 50         # the space is genuinely explored
+    origins = {c.origin for c in res.state.pool}
+    assert {"registry", "fold_mask", "random", "perturb"} <= origins
+    front = res.front()
+    assert front                          # non-empty
+    for c in res.simulated:
+        assert c.sim is not None and "sim_saturation" in c.sim
+        assert S.check(c.topo, ACCEPT_CFG.criteria) == []   # all feasible
+    rows = res.rows()
+    assert len(rows) == len(res.state.pool) + len(res.state.rejected)
+    assert any(r["status"] == "infeasible" for r in rows)
+
+
+def test_search_state_json_roundtrip_and_resume(tmp_path):
+    """Pause after generation 1, serialize, resume: identical pool to
+    an uninterrupted run (per-generation PRNG keys)."""
+    cfg = S.SearchConfig(n=16, n_random=6, generations=2, offspring=6,
+                         sim_top=2, n_rates=2,
+                         cfg=SimConfig(cycles=240, warmup=80))
+    # pause_after == generations must also skip stage-2 simulation
+    at_end = S.run_search(cfg, pause_after=cfg.generations)
+    assert at_end.frame is None and at_end.simulated == []
+    assert at_end.state.generation == cfg.generations
+    paused = S.run_search(cfg, pause_after=1)
+    assert paused.frame is None and paused.simulated == []
+    path = str(tmp_path / "state.json")
+    paused.state.to_json(path)
+    loaded = S.SearchState.from_json(path)
+    assert loaded.config == cfg
+    assert loaded.generation == 1
+    resumed = S.run_search(state=loaded)
+    full = S.run_search(cfg)
+    names = lambda r: sorted(c.topo.name for c in r.state.pool)
+    hashes = lambda r: sorted(c.topo.structural_hash()
+                              for c in r.state.pool)
+    assert names(resumed) == names(full)
+    assert hashes(resumed) == hashes(full)
+    assert resumed.stats["n_generated"] == full.stats["n_generated"]
+    assert sorted(c.topo.name for c in resumed.front()) == \
+        sorted(c.topo.name for c in full.front())
