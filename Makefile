@@ -3,7 +3,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test bench bench-smoke bench-sim bench-workloads \
-        bench-experiments bench-synth bench-synth-full examples
+        bench-experiments bench-faults bench-faults-full bench-synth \
+        bench-synth-full examples
 
 test:                 ## tier-1 verify
 	$(PY) -m pytest -x -q
@@ -23,6 +24,12 @@ bench-workloads:      ## workload grid (topologies x substrates x workloads)
 bench-experiments:    ## mixed static+workload grid through repro.experiments
 	$(PY) -m benchmarks.experiments_bench   # -> results/experiments_grid.csv
 
+bench-faults:         ## fault-degradation smoke, < 60 s, CSV for CI
+	$(PY) -m benchmarks.fault_bench --smoke   # -> results/fault_degradation.csv
+
+bench-faults-full:    ## full degradation curves (Table III, N=36, k<=4)
+	$(PY) -m benchmarks.fault_bench
+
 bench-synth:          ## seeded mini topology search, < 60 s, Pareto CSV
 	$(PY) -m benchmarks.synth_bench --smoke   # -> results/synth_pareto.csv
 
@@ -33,3 +40,4 @@ examples:             ## quickstart examples (experiment-API smoke)
 	$(PY) examples/quickstart.py
 	$(PY) examples/workload_quickstart.py
 	$(PY) examples/synth_quickstart.py
+	$(PY) examples/fault_quickstart.py

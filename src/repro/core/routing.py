@@ -79,13 +79,19 @@ class Routing:
 
         s_idx, d_idx = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
         s_idx, d_idx = s_idx.ravel(), d_idx.ravel()
-        alive = s_idx != d_idx
+        w = traffic[s_idx, d_idx]
+        # follow only pairs that carry traffic: on fault-degraded
+        # topologies (repro.faults) pairs involving dead chiplets are
+        # unreachable by construction, and their masked weight is 0 —
+        # routing them would false-alarm the dead-end check.  Zero-
+        # weight pairs contribute 0 to every weighted consumer (loads,
+        # avg hops, zero-load latency) either way.
+        alive = (s_idx != d_idx) & (w > 0)
         cur = s_idx.copy()
         in_port = np.full(n * n, self.max_ports, dtype=np.int32)  # injection
         loads = np.zeros(self.n_channels)
         hops = np.zeros(n * n, dtype=np.int32)
         lat = np.zeros(n * n, dtype=np.float64)
-        w = traffic[s_idx, d_idx]
 
         for _ in range(max_hops):
             if not alive.any():
@@ -144,13 +150,10 @@ def build_routing(topo: Topology, root: int | None = None,
     the default evaluation.
     """
     if root is None and not sweep_roots:
-        center = int(np.argmin(((topo.pos - topo.pos.mean(0)) ** 2)
-                               .sum(-1)))
-        return _build_routing_rooted(topo, center)
+        return _build_routing_rooted(topo, _central_node(topo))
     if root is None:
         n = topo.n
-        center = int(np.argmin(((topo.pos - topo.pos.mean(0)) ** 2)
-                               .sum(-1)))
+        center = _central_node(topo)
         candidates: list = sorted({0, center, n // 2, n // 4, n - 1})
         builds = [lambda c=c: _build_routing_rooted(topo, c)
                   for c in candidates]
@@ -179,6 +182,20 @@ def build_routing(topo: Topology, root: int | None = None,
         assert best is not None, "no valid routing found"
         return best
     return _build_routing_rooted(topo, root)
+
+
+def _central_node(topo: Topology) -> int:
+    """Most-central chiplet with at least one live link.  On pristine
+    topologies every node has links, so this is exactly the old
+    geometric-centre rule; on fault-degraded topologies (repro.faults)
+    a dead chiplet may sit isolated at the centre, and rooting the
+    up*/down* BFS there would label every survivor unreachable (all
+    channels 'down' -> no turn prohibited -> deadlock)."""
+    d2 = ((topo.pos - topo.pos.mean(0)) ** 2).sum(-1)
+    deg = topo.degrees()
+    if (deg > 0).any():
+        d2 = np.where(deg > 0, d2, np.inf)
+    return int(np.argmin(d2))
 
 
 def _build_routing_rooted(topo: Topology, root: int,

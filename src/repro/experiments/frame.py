@@ -29,6 +29,7 @@ from .scenario import Experiment, Scenario
 COLUMNS = (
     "experiment", "backend", "status", "topology", "n", "substrate",
     "roles", "area_mm2", "traffic", "kind", "rates",
+    "faults", "failed_links", "failed_chiplets",
     "analytic_saturation", "sim_saturation", "rel_throughput",
     "abs_throughput_gbps", "latency_ns", "avg_hops", "chiplet_area_mm2",
     "phy_area_frac", "power_w", "max_link_mm", "radix", "error",
@@ -38,11 +39,15 @@ COLUMNS = (
 def _identity_row(exp: Experiment, s: Scenario, status: str,
                   error: str = "") -> dict:
     row = dict.fromkeys(COLUMNS)
+    fs = s.faults if s.degraded else None
     row.update(experiment=exp.name, backend=exp.backend, status=status,
                topology=s.topology_name, n=s.n,
                substrate=s.resolved_substrate, roles=s.roles,
                area_mm2=s.resolved_area, traffic=s.traffic_name,
-               kind=s.kind, rates=s.rates.describe(), error=error)
+               kind=s.kind, rates=s.rates.describe(),
+               faults=s.fault_name,
+               failed_links=fs.n_links if fs else 0,
+               failed_chiplets=fs.n_chiplets if fs else 0, error=error)
     row.update(dict(s.tags))
     return row
 

@@ -22,7 +22,9 @@ from typing import Sequence
 import numpy as np
 
 #: bump on any breaking change to result-row derivation or layout
-SCHEMA_VERSION = 1
+#: v2: fault columns (faults, failed_links, failed_chiplets) joined the
+#: stable tidy-row layout (DESIGN.md §12)
+SCHEMA_VERSION = 2
 
 
 def stable_columns(rows: Sequence[dict],

@@ -29,6 +29,7 @@ from repro.core import placement as pl
 from repro.core import topology as T
 from repro.core import traffic as TR
 from repro.core.routing import cached_routing, routing_for
+from repro.faults import FaultError
 from repro.core.simulator import SimSpec, make_spec
 from repro.sweep.engine import SweepEngine, _round_up
 from repro.sweep.padding import PadShape
@@ -106,11 +107,27 @@ def resolve_topology(scenario: Scenario):
     re-applied to it so the result row's `roles` column always
     describes the traffic actually run — with the default scheme the
     object's own (possibly hand-assigned) roles are kept.
+
+    A degraded scenario (`Scenario.faults` non-empty) resolves its base
+    topology the same way, then lowers the fault set onto it
+    (`FaultSet.apply`: masked edge list, survivors-connected check) and
+    routes the *degraded* structure — `routing_for` keys on the
+    structural hash, so pristine and every distinct fault mask each get
+    their own cached routing, and an empty fault set shares the
+    pristine entry bitwise.
     """
     s = scenario
     substrate, area = s.resolved_substrate, s.resolved_area
     if isinstance(s.topology, str):
-        return cached_routing(s.topology, s.n, substrate, area, s.roles)
+        if not s.degraded:
+            return cached_routing(s.topology, s.n, substrate, area,
+                                  s.roles)
+        # fault path: build the (cheap) base topology without routing
+        # the pristine structure — only the degraded one is simulated
+        topo = s.faults.apply(
+            T.build(s.topology, s.n, substrate=substrate,
+                    chiplet_area_mm2=area, roles_scheme=s.roles))
+        return topo, routing_for(topo)
     src = s.topology if isinstance(s.topology, T.Topology) \
         else s.topology(s.n)            # generator callable
     if isinstance(src, T.Topology):
@@ -134,25 +151,38 @@ def resolve_topology(scenario: Scenario):
         if topo.n != s.n:
             raise ValueError(f"scenario n={s.n} != generated n={topo.n} "
                              f"({topo.name})")
+    if s.degraded:
+        topo = s.faults.apply(topo)
     return topo, routing_for(topo)
 
 
 def _resolve_traffic(scenario: Scenario, topo, meas: int):
-    """(static matrix | schedule mean, fitted Schedule | None)."""
+    """(static matrix | schedule mean, fitted Schedule | None).
+
+    On a degraded scenario with dead chiplets, static matrices and
+    every schedule phase are masked (`FaultSet.mask_traffic`): dead
+    chiplets neither inject nor receive, and survivors' destination
+    rows are renormalized.  Link-only fault sets leave traffic
+    untouched (masking is a no-op without dead chiplets)."""
     tr = scenario.traffic
+    fs = scenario.faults if scenario.degraded else None
     if isinstance(tr, str):
         if tr not in TR.PATTERNS:
             raise KeyError(f"unknown traffic pattern {tr!r}; choose from "
                            f"{sorted(TR.PATTERNS)} or pass a Workload")
-        return TR.PATTERNS[tr](topo), None
+        tm = TR.PATTERNS[tr](topo)
+        return (fs.mask_traffic(tm) if fs is not None else tm), None
     if isinstance(tr, CustomTraffic):
-        return np.asarray(tr.build(topo), np.float64), None
+        tm = np.asarray(tr.build(topo), np.float64)
+        return (fs.mask_traffic(tm) if fs is not None else tm), None
     schedule = tr.build(topo) if hasattr(tr, "build") else tr(topo)
     if not hasattr(schedule, "mean_traffic"):
         raise TypeError(
             f"traffic callable {getattr(tr, 'name', tr)!r} returned "
             f"{type(schedule).__name__}, not a workloads.Schedule; wrap "
             "plain topo -> matrix builders in experiments.CustomTraffic")
+    if fs is not None:
+        schedule = fs.mask_schedule(schedule)
     if scenario.fit_schedule:
         schedule = schedule.fit(meas)
     return schedule.mean_traffic(), schedule
@@ -182,7 +212,14 @@ def plan(experiment: Experiment, engine: SweepEngine | None = None,
             skipped.append((i, f"{s.topology_name} does not support "
                                f"N={s.n} (topology.N_CONSTRAINTS)"))
             continue
-        topo, routing = resolve_topology(s)
+        try:
+            topo, routing = resolve_topology(s)
+        except FaultError as e:
+            # un-applyable fault set (disconnects the survivors, names a
+            # non-existent link, ...): skip with the sampler-actionable
+            # reason rather than aborting the whole grid
+            skipped.append((i, f"fault set rejected: {e}"))
+            continue
         tm, schedule = _resolve_traffic(s, topo, meas)
         analytic = routing.saturation_rate(tm)
         spec = sched_spec = rates = None

@@ -125,6 +125,15 @@ class Scenario:
     stays glass), registry names and generator callables fall back to
     the paper defaults (organic, 74 mm^2).  Pass explicit values to
     re-stamp a `Topology` onto a different substrate.
+
+    `faults` (a `repro.faults.FaultSet`, DESIGN.md §12) degrades the
+    resolved topology before routing: dead links and dead chiplets'
+    links are masked out of the edge list, deadlock-free routing is
+    rebuilt for the degraded structure (the structural-hash routing
+    cache keys it separately from the pristine topology), and traffic
+    to/from dead chiplets is masked.  `faults=None` and an *empty*
+    `FaultSet` are bitwise identical to each other — the zero-fault
+    path is exactly the pristine path.
     """
     topology: object                 # str | Topology | callable(n)
     n: int
@@ -134,6 +143,7 @@ class Scenario:
     roles: str = "homogeneous"
     rates: RatePolicy = SaturationGrid()
     fit_schedule: bool = True        # fit workloads to the meas. window
+    faults: object = None            # repro.faults.FaultSet | None
     tags: tuple = ()                 # extra ((column, value), ...) pairs
 
     def __post_init__(self):
@@ -142,6 +152,13 @@ class Scenario:
         if bad:
             raise ValueError(f"tags {bad} collide with reserved result "
                              f"columns; pick different tag names")
+        if self.faults is not None:
+            from repro.faults import FaultSet   # deferred: optional layer
+            if not isinstance(self.faults, FaultSet):
+                raise TypeError(
+                    f"faults must be a repro.faults.FaultSet (or None), "
+                    f"got {type(self.faults).__name__}; build one with "
+                    f"faults.sample_faults(topo, k, kind)")
 
     @property
     def kind(self) -> str:
@@ -184,9 +201,19 @@ class Scenario:
                     and not T.N_CONSTRAINTS[self.topology](self.n))
 
     @property
+    def degraded(self) -> bool:
+        """True when a non-empty fault set degrades this scenario."""
+        return self.faults is not None and not self.faults.empty
+
+    @property
+    def fault_name(self) -> str:
+        return self.faults.name if self.degraded else "none"
+
+    @property
     def label(self) -> str:
-        return (f"{self.topology_name}/n{self.n}/"
+        base = (f"{self.topology_name}/n{self.n}/"
                 f"{self.resolved_substrate}/{self.traffic_name}")
+        return f"{base}/{self.fault_name}" if self.degraded else base
 
 
 def scenario_from_case(case, traffic=None,

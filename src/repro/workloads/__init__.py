@@ -17,6 +17,7 @@ few batched compiled programs) or directly via
 """
 from .collective import (collective_workload, collective_workloads,
                          default_mesh_shape)
+from .mixed import mixed_tenant, mixed_tenant_workload, superimpose
 from .schedule import Phase, Schedule, Workload, static_schedule
 from .synthetic import bursty_uniform, hotspot_drift, phase_alternating
 from .traces import (Trace, TraceRegion, builtin_traces, load_trace,
@@ -25,6 +26,7 @@ from .traces import (Trace, TraceRegion, builtin_traces, load_trace,
 __all__ = [
     "Phase", "Schedule", "Workload", "static_schedule",
     "collective_workload", "collective_workloads", "default_mesh_shape",
+    "mixed_tenant", "mixed_tenant_workload", "superimpose",
     "trace_workload", "trace_workloads", "Trace", "TraceRegion",
     "builtin_traces", "load_trace",
     "phase_alternating", "hotspot_drift", "bursty_uniform",

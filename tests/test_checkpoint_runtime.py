@@ -111,3 +111,96 @@ def test_retry():
 
     assert retry(flaky, retries=4, backoff_s=0.01)() == "ok"
     assert len(calls) == 3
+
+
+def test_retry_backoff_sequence(monkeypatch):
+    """Delays follow exact exponential doubling from backoff_s, one
+    sleep per failed attempt, none after the final raise."""
+    from repro.runtime import fault as rf
+    slept = []
+    monkeypatch.setattr(rf.time, "sleep", slept.append)
+    calls = []
+
+    def always_fails():
+        calls.append(1)
+        raise OSError("transient")
+
+    with pytest.raises(OSError):
+        retry(always_fails, retries=3, backoff_s=0.5)()
+    assert calls == [1, 1, 1, 1]              # initial + 3 retries
+    assert slept == [0.5, 1.0, 2.0]           # no sleep after last raise
+
+
+def test_retry_exception_filtering(monkeypatch):
+    """Exceptions outside `on` propagate immediately: no retry, no
+    sleep."""
+    from repro.runtime import fault as rf
+    slept = []
+    monkeypatch.setattr(rf.time, "sleep", slept.append)
+    calls = []
+
+    def wrong_kind():
+        calls.append(1)
+        raise ValueError("a bug, not a transient")
+
+    with pytest.raises(ValueError):
+        retry(wrong_kind, retries=5, backoff_s=0.1)()
+    assert calls == [1] and slept == []
+    # ...and a custom `on` widens the net
+    calls.clear()
+
+    def flaky_value():
+        calls.append(1)
+        if len(calls) < 2:
+            raise ValueError("transient here")
+        return "ok"
+
+    assert retry(flaky_value, retries=2, backoff_s=0.1,
+                 on=(ValueError,))() == "ok"
+    assert slept == [0.1]
+
+
+def test_watchdog_factor_boundary():
+    """Flagging is strict: step == factor x median is NOT slow, just
+    above is; and nothing is flagged before 8 observations."""
+    warm = StepWatchdog(window=16, factor=2.5)
+    for _ in range(7):
+        assert not warm.observe(100.0)        # < 8 samples: never slow
+    assert warm.flagged == 0
+
+    wd = StepWatchdog(window=16, factor=2.5)
+    for _ in range(8):
+        wd.observe(1.0)                       # window: 8 x 1.0, median 1.0
+    assert not wd.observe(2.5)                # exactly factor x median
+    assert wd.flagged == 0
+    assert wd.observe(2.5 + 1e-9)             # just above
+    assert wd.flagged == 1
+
+
+def test_watchdog_uses_rolling_window():
+    """Old samples age out of the deque: a regime change re-baselines
+    the median instead of flagging forever."""
+    wd = StepWatchdog(window=8, factor=2.0)
+    for _ in range(8):
+        wd.observe(1.0)
+    assert wd.observe(10.0)                   # slow vs the 1.0 regime
+    for _ in range(8):
+        wd.observe(10.0)                      # window now all 10.0
+    assert not wd.observe(10.0)               # re-baselined
+
+
+def test_heartbeat_lifecycle_and_atomicity(tmp_path):
+    p = str(tmp_path / "sub" / "hb.json")
+    hb = Heartbeat(p, interval_s=100)
+    assert hb.start() is hb                   # chainable; beats at start
+    import json
+    with open(p) as f:
+        data = json.load(f)
+    assert data["pid"] == os.getpid() and data["time"] <= time.time()
+    hb.beat({"step": 12})
+    with open(p) as f:
+        assert json.load(f)["step"] == 12
+    assert not os.path.exists(p + ".tmp")     # atomic tmp+replace
+    hb.stop()
+    hb._thread.join(timeout=5)
+    assert not hb._thread.is_alive()

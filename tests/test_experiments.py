@@ -346,3 +346,105 @@ def test_frame_csv_and_selects(tmp_path):
     # tags may not shadow reserved result columns
     with pytest.raises(ValueError, match="reserved"):
         X.Scenario("mesh", 16, tags=(("status", "phase1"),))
+
+
+# ---------------------------------------------------------------------
+# fault injection through the pipeline (DESIGN.md §12)
+# ---------------------------------------------------------------------
+
+def test_empty_faultset_bitwise_identical_to_no_faults():
+    """Regression: `faults=FaultSet()` must be byte-for-byte the
+    no-faults path — same routing cache entry, same sweep counters —
+    for static AND workload traffic."""
+    import repro.faults as F
+    eng = SweepEngine(cfg=CFG)
+    mk = lambda fs: [
+        X.Scenario("mesh", 16, faults=fs, rates=X.SaturationGrid(3)),
+        X.Scenario("folded_hexa_torus", 16, faults=fs,
+                   traffic=WORKLOADS[0], rates=X.SaturationGrid(3))]
+    base = X.run(X.Experiment(mk(None), cfg=CFG), engine=eng)
+    empty = X.run(X.Experiment(mk(F.FaultSet()), cfg=CFG), engine=eng)
+    for i in range(2):
+        assert empty.planned[i].routing is base.planned[i].routing
+        assert empty.planned[i].topo is base.planned[i].topo
+        for k in RAW:
+            np.testing.assert_array_equal(empty.results[i][k],
+                                          base.results[i][k], err_msg=k)
+        assert empty.rows[i]["faults"] == "none"
+        assert empty.rows[i]["failed_links"] == 0
+
+
+def test_degraded_scenarios_flow_through_pipeline():
+    """Link/chiplet fault sets run in the same padded batches; columns
+    report the fault identity; disconnecting sets are skipped with an
+    actionable reason, not crashed on."""
+    import repro.faults as F
+    topo = T.build("folded_hexa_torus", 16)
+    fs = F.sample_faults(topo, 2, "random", seed=0)
+    chip = F.sample_faults(topo, 1, "chiplets", seed=0)
+    e = np.sort(np.asarray(T.build("mesh", 16).edges), axis=1)
+    cut = F.FaultSet(links=tuple(
+        tuple(int(x) for x in lk) for lk in e[(e == 0).any(1)]))
+    exp = X.Experiment(
+        [X.Scenario("folded_hexa_torus", 16, rates=X.SaturationGrid(3)),
+         X.Scenario("folded_hexa_torus", 16, faults=fs,
+                    rates=X.SaturationGrid(3)),
+         X.Scenario("folded_hexa_torus", 16, faults=chip,
+                    rates=X.SaturationGrid(3)),
+         X.Scenario("mesh", 16, faults=cut,
+                    rates=X.SaturationGrid(3))], cfg=CFG)
+    pl = X.plan(exp)
+    assert pl.n_planned == 3
+    assert len(pl.skipped) == 1
+    i, reason = pl.skipped[0]
+    assert i == 3 and "fault set rejected" in reason \
+        and "islands" in reason
+    frame = X.run(exp)
+    assert [r["status"] for r in frame.rows] == ["ok", "ok", "ok",
+                                                 "invalid"]
+    pristine, degraded, dead_chip = frame.rows[:3]
+    assert degraded["faults"] == fs.name
+    assert degraded["failed_links"] == 2 and degraded["failed_chiplets"] == 0
+    assert dead_chip["failed_chiplets"] == 1
+    assert degraded["sim_saturation"] <= pristine["sim_saturation"] + 1e-9
+    # the degraded cell routed a genuinely different structure
+    assert frame.planned[1].routing is not frame.planned[0].routing
+    assert len(frame.planned[1].topo.edges) == \
+        len(frame.planned[0].topo.edges) - 2
+    # dead chiplet neither injects nor receives in the resolved traffic
+    dead = chip.chiplets[0]
+    assert frame.planned[2].traffic[dead].sum() == 0
+    assert frame.planned[2].traffic[:, dead].sum() == 0
+    # scenario labels and Scenario.degraded reflect the fault identity
+    assert exp.scenarios[1].degraded and not exp.scenarios[0].degraded
+    assert fs.name in exp.scenarios[1].label
+
+
+def test_workload_scenario_with_chiplet_faults_masks_every_phase():
+    """A schedule run under chiplet faults carries masked phases and the
+    whole (degraded topo, masked schedule) pair stays bitwise equal to
+    the single-spec oracle."""
+    import repro.faults as F
+    from repro.core.simulator import run_batch
+    topo = T.build("mesh", 16)
+    chip = F.sample_faults(topo, 1, "chiplets", seed=3)
+    scen = X.Scenario("mesh", 16, traffic=WORKLOADS[0], faults=chip,
+                      rates=X.SaturationGrid(3))
+    frame = X.run(X.Experiment([scen], cfg=CFG),
+                  engine=SweepEngine(cfg=CFG))
+    assert frame.rows[0]["status"] == "ok"
+    ps = frame.planned[0]
+    dead = chip.chiplets[0]
+    for p in ps.schedule.phases:
+        m = np.asarray(p.traffic)
+        assert m[dead].sum() == 0 and m[:, dead].sum() == 0
+    single = run_batch([ps.spec], ps.rates[None, :], CFG,
+                       schedules=[ps.sched_spec])[0]
+    for k in RAW:
+        np.testing.assert_array_equal(single[k], frame.results[0][k],
+                                      err_msg=k)
+
+
+def test_scenario_faults_type_error():
+    with pytest.raises(TypeError, match="FaultSet"):
+        X.Scenario("mesh", 16, faults=[(0, 1)])

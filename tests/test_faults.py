@@ -1,0 +1,180 @@
+"""Fault-injection layer tests (DESIGN.md §12): `FaultSet` lowering,
+survivor-connectivity enforcement, seeded sampler determinism, and
+traffic masking."""
+import numpy as np
+import pytest
+
+import repro.faults as F
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.routing import routing_for
+
+
+def _mesh16():
+    return T.build("mesh", 16)
+
+
+# ---------------------------------------------------------------------
+# FaultSet construction / canonicalization
+# ---------------------------------------------------------------------
+
+def test_canonicalization_and_names():
+    fs = F.FaultSet(links=((5, 1), (1, 5), (2, 3)), chiplets=(7, 7, 2))
+    assert fs.links == ((1, 5), (2, 3))          # sorted, deduped, (lo, hi)
+    assert fs.chiplets == (2, 7)
+    assert fs.n_links == 2 and fs.n_chiplets == 2
+    assert fs.name == "L1-5,2-3+C2,7"
+    assert F.FaultSet().name == "none" and F.FaultSet().empty
+    assert F.FaultSet(links=((0, 1),), name="custom").name == "custom"
+    with pytest.raises(F.FaultError, match="self-loop"):
+        F.FaultSet(links=((3, 3),))
+
+
+def test_empty_apply_is_the_same_object():
+    topo = _mesh16()
+    fs = F.FaultSet()
+    assert fs.apply(topo) is topo
+    # ...so the pristine routing cache entry is shared bitwise
+    assert routing_for(fs.apply(topo)) is routing_for(topo)
+
+
+# ---------------------------------------------------------------------
+# lowering onto a Topology
+# ---------------------------------------------------------------------
+
+def test_apply_removes_links_and_rebuilds_routing():
+    topo = _mesh16()
+    link = tuple(int(x) for x in np.asarray(topo.edges)[0])
+    fs = F.FaultSet(links=(link,))
+    deg = fs.apply(topo)
+    assert len(deg.edges) == len(topo.edges) - 1
+    assert deg.n == topo.n and deg.name == topo.name
+    assert deg.structural_hash() != topo.structural_hash()
+    r_deg, r_pri = routing_for(deg), routing_for(topo)
+    assert r_deg is not r_pri                     # distinct cache entries
+    u = TR.uniform(topo)
+    assert r_deg.saturation_rate(u) <= r_pri.saturation_rate(u) + 1e-12
+
+
+def test_unknown_link_and_bad_chiplet_are_errors():
+    topo = _mesh16()
+    with pytest.raises(F.FaultError, match="not links of this topology"):
+        F.FaultSet(links=((0, 15),)).apply(topo)
+    with pytest.raises(F.FaultError, match="out of range"):
+        F.FaultSet(chiplets=(16,)).apply(topo)
+
+
+def test_disconnecting_set_rejected_with_island_sizes():
+    topo = _mesh16()
+    e = np.sort(np.asarray(topo.edges), axis=1)
+    cut = tuple(tuple(int(x) for x in lk) for lk in e[(e == 0).any(1)])
+    with pytest.raises(F.DisconnectedFaultError,
+                       match=r"islands of sizes \[15, 1\]"):
+        F.FaultSet(links=cut).apply(topo)
+    assert not F.surviving_connected(topo, F.FaultSet(links=cut))
+    # the same cut is fine if chiplet 0 is itself dead: isolating a dead
+    # chiplet is what dying means, not a partition of the survivors
+    fs = F.FaultSet(links=cut, chiplets=(0,))
+    deg = fs.apply(topo)
+    assert not (np.asarray(deg.edges) == 0).any()
+    assert F.surviving_connected(topo, fs)
+
+
+def test_dead_chiplet_drops_all_its_links():
+    topo = _mesh16()
+    fs = F.FaultSet(chiplets=(5,))
+    deg = fs.apply(topo)
+    assert not (np.asarray(deg.edges) == 5).any()
+    d = np.asarray(topo.edges)
+    assert len(deg.edges) == len(d) - int((d == 5).any(1).sum())
+
+
+# ---------------------------------------------------------------------
+# traffic masking
+# ---------------------------------------------------------------------
+
+def test_mask_traffic_zeroes_and_renormalizes():
+    topo = _mesh16()
+    u = TR.uniform(topo)
+    fs = F.FaultSet(chiplets=(3, 8))
+    m = fs.mask_traffic(u)
+    assert (m[[3, 8], :] == 0).all() and (m[:, [3, 8]] == 0).all()
+    alive = fs.alive(16)
+    np.testing.assert_allclose(m[alive].sum(1), 1.0)
+    # link-only fault sets leave traffic untouched — same object
+    only_links = F.FaultSet(links=(tuple(
+        int(x) for x in np.asarray(topo.edges)[0]),))
+    assert only_links.mask_traffic(u) is u
+
+
+def test_mask_schedule_masks_every_phase():
+    import repro.workloads as W
+    topo = _mesh16()
+    sched = W.phase_alternating(topo, phase_cycles=50, repeats=1)
+    fs = F.FaultSet(chiplets=(2,))
+    masked = fs.mask_schedule(sched)
+    assert len(masked.phases) == len(sched.phases)
+    for p in masked.phases:
+        m = np.asarray(p.traffic)
+        assert (m[2, :] == 0).all() and (m[:, 2] == 0).all()
+    assert fs.mask_schedule(sched) is not sched
+    assert F.FaultSet(links=((0, 1),)).mask_schedule(sched) is sched
+
+
+# ---------------------------------------------------------------------
+# samplers
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["random", "correlated", "chiplets"])
+def test_samplers_deterministic_and_survivable(kind):
+    topo = T.build("folded_hexa_torus", 36)
+    a = F.sample_faults(topo, 3, kind, seed=7)
+    b = F.sample_faults(topo, 3, kind, seed=7)
+    assert a == b                                # same draw, same seed
+    assert (a.n_links if kind != "chiplets" else a.n_chiplets) == 3
+    a.apply(topo)                                # survivable by default
+    draws = {F.sample_faults(topo, 3, kind, seed=s) for s in range(6)}
+    assert len(draws) > 1                        # seed actually matters
+
+
+def test_correlated_faults_are_spatially_tight():
+    topo = T.build("mesh", 64)
+    blast = F.sample_faults(topo, 5, "correlated", seed=1)
+    rand = F.sample_faults(topo, 5, "random", seed=1)
+    pmm = topo.pos_mm()
+
+    def spread(fs):
+        mids = np.array([(pmm[a] + pmm[b]) / 2 for a, b in fs.links])
+        return np.linalg.norm(mids - mids.mean(0), axis=1).max()
+
+    assert spread(blast) < spread(rand)
+
+
+def test_adversarial_faults_hurt_most():
+    topo = T.build("folded_hexa_torus", 16)
+    u = TR.uniform(topo)
+    pristine = routing_for(topo).saturation_rate(u)
+    worst = F.sample_faults(topo, 2, "adversarial")
+    assert worst == F.sample_faults(topo, 2, "adversarial")  # no seed
+    sat_worst = routing_for(worst.apply(topo)).saturation_rate(u)
+    assert sat_worst < pristine
+    # the greedy draw targets loaded links: its first victim is a
+    # maximally-loaded channel of the pristine routing
+    loads, _, _ = routing_for(topo).paths_channel_loads(u)
+    r = routing_for(topo)
+    link_load = {}
+    for c in range(len(loads)):
+        a, b = int(r.ch_src[c]), int(r.ch_dst[c])
+        lk = (min(a, b), max(a, b))
+        link_load[lk] = link_load.get(lk, 0.0) + float(loads[c])
+    first = F.sample_faults(topo, 1, "adversarial").links[0]
+    assert link_load[first] == pytest.approx(max(link_load.values()))
+
+
+def test_sampler_errors():
+    topo = _mesh16()
+    with pytest.raises(KeyError, match="unknown fault kind"):
+        F.sample_faults(topo, 1, "nonesuch")
+    with pytest.raises(F.FaultError, match="survivable"):
+        F.sample_faults(topo, len(topo.edges), "random")
+    assert F.sample_faults(topo, 0, "random").empty

@@ -111,3 +111,71 @@ def test_traffic_patterns_are_distributions():
         rows = m.sum(1)
         active = rows > 0
         assert np.allclose(rows[active], 1.0)
+
+
+# ---------------------------------------------------------------------
+# fault-masked routing properties (DESIGN.md §12)
+# ---------------------------------------------------------------------
+
+_FAULT_TOPOS = ("mesh", "torus", "hexamesh", "folded_hexa_torus",
+                "honeycomb_mesh", "kite_medium")
+
+
+@given(name=st.sampled_from(_FAULT_TOPOS), k=st.integers(1, 4),
+       seed=st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_fault_masked_routing_stays_deadlock_free_and_complete(name, k,
+                                                               seed):
+    """Property: any survivable random link-fault draw leaves routing
+    deadlock-free (acyclic CDG) and fully reachable (every pair routed
+    without a dead end)."""
+    import repro.faults as F
+    topo = T.build(name, 16)
+    try:
+        fs = F.sample_faults(topo, k, "random", seed=seed)
+    except F.FaultError:
+        return                       # fewer than k survivable faults
+    deg = fs.apply(topo)
+    r = build_routing(deg)
+    assert dependency_graph_is_acyclic(r)
+    loads, hops, _ = r.paths_channel_loads(TR.uniform(deg))
+    off = ~np.eye(deg.n, dtype=bool)
+    assert (hops[off] >= 1).all()
+    assert loads.sum() > 0
+
+
+@given(name=st.sampled_from(_FAULT_TOPOS), k=st.integers(1, 3),
+       seed=st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_chiplet_fault_routing_reaches_all_survivors(name, k, seed):
+    """Property: with k dead chiplets, routing on the degraded topology
+    is deadlock-free and reaches every surviving pair; dead chiplets
+    neither inject nor receive in the masked traffic."""
+    import repro.faults as F
+    topo = T.build(name, 16)
+    try:
+        fs = F.sample_faults(topo, k, "chiplets", seed=seed)
+    except F.FaultError:
+        return
+    deg = fs.apply(topo)
+    r = build_routing(deg)
+    assert dependency_graph_is_acyclic(r)
+    tm = fs.mask_traffic(TR.uniform(topo))
+    alive = fs.alive(topo.n)
+    assert tm[~alive].sum() == 0 and tm[:, ~alive].sum() == 0
+    loads, hops, _ = r.paths_channel_loads(tm)    # raises on dead end
+    pair = np.outer(alive, alive) & ~np.eye(topo.n, dtype=bool)
+    assert (hops[pair] >= 1).all()
+    assert loads.sum() > 0
+
+
+def test_disconnecting_fault_sets_are_rejected():
+    """A fault set that partitions the survivors is a clear error at
+    apply time, and the planner-facing probe agrees."""
+    import repro.faults as F
+    topo = T.build("mesh", 16)
+    e = np.sort(np.asarray(topo.edges), axis=1)
+    cut = tuple(tuple(int(x) for x in lk) for lk in e[(e == 0).any(1)])
+    with pytest.raises(F.DisconnectedFaultError, match="islands"):
+        F.FaultSet(links=cut).apply(topo)
+    assert not F.surviving_connected(topo, F.FaultSet(links=cut))
