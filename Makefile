@@ -4,7 +4,7 @@ PY := PYTHONPATH=src python
 
 .PHONY: test bench bench-smoke bench-sim bench-workloads \
         bench-experiments bench-faults bench-faults-full bench-synth \
-        bench-synth-full examples
+        bench-synth-full bench-obs bench-obs-full examples
 
 test:                 ## tier-1 verify
 	$(PY) -m pytest -x -q
@@ -36,8 +36,15 @@ bench-synth:          ## seeded mini topology search, < 60 s, Pareto CSV
 bench-synth-full:     ## full N=48 search (asserts FHT on front, 5x prefilter)
 	$(PY) -m benchmarks.synth_bench
 
+bench-obs:            ## observability smoke: link heatmap + phase trace, < 60 s
+	$(PY) -m benchmarks.obs_bench --smoke   # -> results/link_load_*.csv, results/sweep_phases.trace.json
+
+bench-obs-full:       ## full link-load heatmap grid (Table III, N=36)
+	$(PY) -m benchmarks.obs_bench
+
 examples:             ## quickstart examples (experiment-API smoke)
 	$(PY) examples/quickstart.py
 	$(PY) examples/workload_quickstart.py
 	$(PY) examples/synth_quickstart.py
 	$(PY) examples/fault_quickstart.py
+	$(PY) examples/obs_quickstart.py

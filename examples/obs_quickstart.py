@@ -1,0 +1,83 @@
+"""Observability quickstart: flight recorder + span tracing
+(DESIGN.md §13).
+
+    PYTHONPATH=src python examples/obs_quickstart.py
+
+Runs a tiny Mesh vs FoldedHexaTorus experiment with the in-sim flight
+recorder on (`SimConfig(telemetry=True)`) and host-side span tracing
+enabled, then shows the three things the telemetry layer gives you:
+
+  1. per-link load — which directed channels carry the traffic, how
+     unevenly (p95/max utilization, Gini imbalance), and why folding
+     wins: its channel-load histogram is flatter at equal throughput;
+  2. exact conservation — the per-node injection/ejection counters
+     reconcile bitwise with the aggregate counters the simulator
+     already reported, so the flight data is trustworthy, not sampled;
+  3. where the wall-clock went — a Chrome-trace/Perfetto JSON of the
+     plan -> execute -> dispatch/wait span tree with the compile-vs-run
+     split (load results/obs_quickstart.trace.json in ui.perfetto.dev).
+"""
+import os
+
+import numpy as np
+
+import repro.experiments as X
+from repro.core.simulator import SimConfig
+from repro.obs import metrics
+from repro.obs.report import gini, link_load_summary
+from repro.obs.trace import (disable_tracing, enable_tracing,
+                             save_chrome_trace)
+
+
+def main():
+    cfg = SimConfig(cycles=600, warmup=200, telemetry=True)
+    exp = X.Experiment(
+        [X.Scenario(name, 16, rates=X.SaturationGrid(4))
+         for name in ("mesh", "folded_hexa_torus")],
+        cfg=cfg, name="obs_quickstart")
+
+    enable_tracing()
+    frame = X.run(exp)
+    disable_tracing()
+
+    print("=== 1. per-link load at saturation (the paper's mechanism) ===")
+    for cell in link_load_summary(frame.all_link_rows()):
+        print(f"  {cell['topology']:18s} links={cell['n_links']:3d} "
+              f"p50={cell['util_p50']:.3f} p95={cell['util_p95']:.3f} "
+              f"max={cell['util_max']:.3f} gini={cell['gini']:.3f}")
+    mesh, fht = frame.rows[0], frame.rows[1]
+    print(f"  -> folding flattens the load: FHT gini "
+          f"{fht['link_gini']:.3f} vs mesh {mesh['link_gini']:.3f}")
+
+    print("\n=== 2. conservation: flight counters == aggregate counters "
+          "===")
+    for i, row in enumerate(frame.rows):
+        res = frame.results[i]
+        if row["status"] != "ok" or res is None:
+            continue
+        np.testing.assert_array_equal(res["inj_node"].sum(axis=1),
+                                      res["accepted_n"])
+        np.testing.assert_array_equal(res["eject_node"].sum(axis=1),
+                                      res["delivered"])
+        np.testing.assert_array_equal(res["lat_hist"].sum(axis=1),
+                                      res["delivered"])
+        print(f"  {row['topology']:18s} sum(inj)==accepted, "
+              f"sum(eject)==delivered, sum(hist)==delivered  [exact]")
+
+    print("\n=== 3. where the wall-clock went ===")
+    results = os.path.join(os.path.dirname(__file__), "..", "results")
+    save_chrome_trace(os.path.join(results, "obs_quickstart.trace.json"),
+                      metadata=dict(example="obs_quickstart"))
+    snap = metrics.snapshot()
+    print(f"  sweep runs={snap.get('sweep.runs', 0):.0f} "
+          f"compiles={snap.get('sweep.compiles', 0):.0f} "
+          f"runner cache misses={snap['cache.runner.misses']} "
+          f"hits={snap['cache.runner.hits']}")
+    print("  open results/obs_quickstart.trace.json in ui.perfetto.dev "
+          "for the span tree")
+
+    frame.to_link_csv(os.path.join(results, "obs_quickstart_links.csv"))
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,8 @@ import numpy as np
 import scipy.sparse as sp
 import scipy.sparse.csgraph as csgraph
 
+from repro.obs.trace import trace as _span
+
 from .topology import Topology, build
 from . import linkmodel as lm
 
@@ -327,7 +329,9 @@ def routing_for(topo: Topology) -> Routing:
         _ROUTING_CACHE_STATS["hits"] += 1
         return hit
     _ROUTING_CACHE_STATS["misses"] += 1
-    r = build_routing(topo)
+    with _span("routing.build", cat="routing", topology=topo.name,
+               n=topo.n, substrate=topo.substrate):
+        r = build_routing(topo)
     _ROUTING_CACHE[key] = r
     while len(_ROUTING_CACHE) > _ROUTING_CACHE_MAX:
         _ROUTING_CACHE.pop(next(iter(_ROUTING_CACHE)))

@@ -62,6 +62,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import trace as _span
+from repro.obs.trace import tracing_enabled as _tracing
+
 from . import linkmodel as lm
 from .routing import Routing
 
@@ -71,6 +74,18 @@ _GOLD = np.uint32(0x9E3779B9)
 _MIX_T = np.uint32(0x85EBCA6B)
 _MIX_N = np.uint32(0xC2B2AE3D)
 
+#: flight-recorder latency-histogram bins: bin h counts ejections with
+#: latency in [2^(h-1), 2^h) cycles (bin 0: latency < 1 is impossible,
+#: so it stays 0; the last bin is open-ended).  Coarse by design — the
+#: histogram shape distinguishes "near zero-load" from "saturating"
+#: without carrying a per-packet tensor through the scan.
+LAT_HIST_BINS = 16
+
+#: per-spec result keys added by `SimConfig(telemetry=True)`; every one
+#: has a leading rate axis R (DESIGN.md §13)
+TELEMETRY_KEYS = ("link_busy", "link_stall", "link_occ_sum", "link_util",
+                  "inj_node", "eject_node", "lat_hist")
+
 
 class SimConfig(NamedTuple):
     n_vcs: int = 4
@@ -79,6 +94,8 @@ class SimConfig(NamedTuple):
     warmup: int = 1000
     seed: int = 0
     alloc: str = "auto"     # "auto" | "jnp" | "pallas"
+    telemetry: bool = False  # flight recorder (DESIGN.md §13); off path
+    #                          is bitwise identical to pre-telemetry code
 
 
 class SimState(NamedTuple):
@@ -101,6 +118,14 @@ class SimState(NamedTuple):
     offered_ph: jnp.ndarray | None = None     # [K]
     accepted_ph: jnp.ndarray | None = None    # [K]
     lat_ph: jnp.ndarray | None = None         # [K, N] int32
+    # flight-recorder counters (telemetry mode only; DESIGN.md §13).
+    # Row C / padded tails are sacrificial, sliced away host-side.
+    tel_busy: jnp.ndarray | None = None       # [C+1] measured traversals
+    tel_stall: jnp.ndarray | None = None      # [C+1] credit-starved cycles
+    tel_occ: jnp.ndarray | None = None        # [C+1, V] occupancy sums
+    tel_inj: jnp.ndarray | None = None        # [N] accepted injections
+    tel_eject: jnp.ndarray | None = None      # [N] ejections
+    tel_hist: jnp.ndarray | None = None       # [LAT_HIST_BINS] latency
 
 
 @dataclasses.dataclass
@@ -267,7 +292,11 @@ def _route_lookup(table, cred_pad, head_dst, cnt, n: int, p: int, v: int):
     """Table lookup + credit check for every (node, in-port, VC) head flit.
 
     Returns op_slot [N, PI, V] int32 (requested output slot, ejection = P,
-    negative = no request) and eligible [N, PI, V] bool.
+    negative = no request), eligible [N, PI, V] bool, and starved
+    [N, PI, V] bool — a valid head flit whose route names a real output
+    port but whose downstream VC has no credit (the flight recorder's
+    credit-starvation counter; unused outputs are DCE'd under jit, so
+    the telemetry-off path is unchanged).
     """
     PI = p + 1
     node_idx = jnp.arange(n)[:, None, None]
@@ -282,7 +311,8 @@ def _route_lookup(table, cred_pad, head_dst, cnt, n: int, p: int, v: int):
     op_slot = jnp.where(is_eject, p, op)           # [N, PI, V]
     have_credit = cred_pad[node_idx, jnp.clip(op_slot, 0, p), vcs] > 0
     eligible = valid & (op_slot >= 0) & (have_credit | is_eject)
-    return op_slot, eligible
+    starved = valid & (op_slot >= 0) & ~is_eject & ~have_credit
+    return op_slot, eligible, starved
 
 
 def _alloc_jnp(op_slot, eligible, rr_vc, rr_port):
@@ -345,8 +375,8 @@ def router_phase(table, out_ch_pad_credits, head_dst, cnt, rr,
     split per DESIGN.md §6.  Returns (win_mask, out_req, vc_choice,
     port_wins) like the seed implementation.
     """
-    op_slot, eligible = _route_lookup(table, out_ch_pad_credits,
-                                      head_dst, cnt, n, p, v)
+    op_slot, eligible, _ = _route_lookup(table, out_ch_pad_credits,
+                                         head_dst, cnt, n, p, v)
     win_mask, vc_choice, out_req = _alloc_jnp(op_slot, eligible, rr, rr)
     return win_mask, out_req, vc_choice, jnp.any(win_mask, axis=2)
 
@@ -364,8 +394,15 @@ def _init_state(nm: int, pm: int, cm: int, dm: int, cfg: SimConfig,
               offered_ph=z((kmax,), jnp.int32),
               accepted_ph=z((kmax,), jnp.int32),
               lat_ph=z((kmax, nm), jnp.int32)) if kmax else {}
+    tel = dict(tel_busy=z((cm + 1,), jnp.int32),
+               tel_stall=z((cm + 1,), jnp.int32),
+               tel_occ=z((cm + 1, V), jnp.int32),
+               tel_inj=z((nm,), jnp.int32),
+               tel_eject=z((nm,), jnp.int32),
+               tel_hist=z((LAT_HIST_BINS,), jnp.int32)) \
+        if cfg.telemetry else {}
     return SimState(
-        **ph,
+        **ph, **tel,
         buf_dst=jnp.full((nm, PI, V, B + 1), -1, jnp.int32),
         buf_t=z((nm, PI, V, B + 1), jnp.int32),
         head=z((nm, PI, V), jnp.int32),
@@ -464,14 +501,16 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
         accepted = state.accepted + m32 * jnp.sum(do_inj.astype(jnp.int32))
 
         # ---- 4. route + allocate ---------------------------------------
+        cnt_obs = cnt            # occupancy snapshot (flight recorder):
+        #                          post-arrival, post-injection, pre-pop
         head_dst = jnp.take_along_axis(
             buf_dst, state.head[..., None], axis=3)[..., 0]
         head_t = jnp.take_along_axis(
             buf_t, state.head[..., None], axis=3)[..., 0]
         cred_pad = jnp.concatenate(
             [credits, jnp.full((N, 1, V), INF, jnp.int32)], axis=1)
-        op_slot, eligible = _route_lookup(a.table, cred_pad, head_dst,
-                                          cnt, N, P, V)
+        op_slot, eligible, starved = _route_lookup(a.table, cred_pad,
+                                                   head_dst, cnt, N, P, V)
         rr_vc = state.rr % V
         rr_port = state.rr % a.pi
         win_mask, vc_choice, out_req = alloc_fn(op_slot, eligible,
@@ -520,13 +559,49 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
         credits = credits.at[nn, jnp.clip(out_req, 0, P - 1), wvc].add(
             -traverse.astype(jnp.int32))
 
+        # ---- 6. flight recorder (telemetry mode only; DESIGN.md §13) ---
+        # Pure observers: every update is an int scatter-add onto a
+        # dedicated counter tensor, weighted by masks the step already
+        # computed, with non-contributing lanes routed to the sacrificial
+        # row C (or weighted 0) — so real counters are untouched and the
+        # per-spec slices stay padding-invariant.
+        tel_upd = {}
+        if cfg.telemetry:
+            # channel utilization: one traversal per (channel, cycle)
+            tel_busy = state.tel_busy.at[oc_w].add(
+                m32 * traverse.astype(jnp.int32))
+            # credit starvation, attributed to the requested out channel
+            st_ch = a.out_ch[jnp.arange(N)[:, None, None],
+                             jnp.clip(op_slot, 0, P - 1)]  # [N, PI, V]
+            st_ch_w = jnp.where(starved, st_ch, C)
+            tel_stall = state.tel_stall.at[st_ch_w].add(
+                m32 * starved.astype(jnp.int32))
+            # per-VC occupancy of each channel's downstream input buffer
+            occ = cnt_obs[a.ch_dst, a.ch_in_port]          # [C, V]
+            tel_occ = state.tel_occ.at[jnp.arange(C)].add(m32 * occ)
+            # injection/ejection conservation counters (sum == accepted /
+            # delivered exactly — the reconciliation tests rely on this)
+            tel_inj = state.tel_inj + m32 * do_inj.astype(jnp.int32)
+            tel_eject = state.tel_eject + m32 * jnp.sum(
+                eject.astype(jnp.int32), axis=1)
+            # coarse latency histogram: bin h counts lat in [2^(h-1), 2^h)
+            edges = jnp.int32(2) ** jnp.arange(LAT_HIST_BINS - 1)
+            lat = t - w_t                                  # [N, PI]
+            hbin = jnp.sum((lat[..., None] >= edges).astype(jnp.int32),
+                           axis=-1)
+            tel_hist = state.tel_hist.at[hbin].add(
+                m32 * eject.astype(jnp.int32))
+            tel_upd = dict(tel_busy=tel_busy, tel_stall=tel_stall,
+                           tel_occ=tel_occ, tel_inj=tel_inj,
+                           tel_eject=tel_eject, tel_hist=tel_hist)
+
         return SimState(
             buf_dst=buf_dst, buf_t=buf_t, head=head, cnt=cnt,
             credits=credits, link_dst=link_dst, link_t=link_t,
             link_vc=link_vc, credit_pipe=credit_pipe,
             rr=(state.rr + 1) % (V * a.pi),
             delivered=delivered, lat_node=lat_node, offered=offered,
-            accepted=accepted, **ph_upd)
+            accepted=accepted, **ph_upd, **tel_upd)
 
     def run_one(a, sch, rate):
         state = _init_state(N, P, C, D, cfg, kmax)
@@ -539,6 +614,9 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
         if kmax:
             out += (state.delivered_ph, state.offered_ph,
                     state.accepted_ph, state.lat_ph)
+        if cfg.telemetry:
+            out += (state.tel_busy, state.tel_stall, state.tel_occ,
+                    state.tel_inj, state.tel_eject, state.tel_hist)
         return out
 
     if kmax:
@@ -627,9 +705,20 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
     (`delivered_ph` [R, K], `lat_sum_ph`, `throughput_ph`, `latency_ph`,
     `phase_cycles` [K]).  k_pad pads the phase axis (executable reuse
     across workloads with different phase counts).
+
+    cfg.telemetry=True switches on the flight recorder (DESIGN.md §13):
+    result dicts gain `TELEMETRY_KEYS` — per-directed-channel busy /
+    stall / occupancy-sum counters (`link_busy`/`link_stall` [R, c],
+    `link_occ_sum` [R, c, V]), derived `link_util` (busy / measured
+    cycles), per-node `inj_node`/`eject_node` [R, n] (summing exactly
+    to `accepted_n`/`delivered`), and a coarse `lat_hist` [R,
+    LAT_HIST_BINS].  Sacrificial and padded lanes are sliced away, so
+    telemetry is padding-invariant like every other counter; with
+    telemetry off the compiled program is unchanged.
     """
     from repro.sweep.padding import stack_schedules, stack_specs
-    batch, shape = stack_specs(specs, pad_shape)
+    with _span("sim.stack", cat="sim", specs=len(specs)):
+        batch, shape = stack_specs(specs, pad_shape)
     s = len(specs)
     rates = np.asarray(rates, np.float32)
     if rates.ndim == 1:
@@ -639,7 +728,7 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
     if schedules is None:
         runner = get_batch_runner(shape.n, shape.p, shape.c, shape.d, cfg,
                                   resolve_alloc(cfg.alloc))
-        raw = runner(batch, jnp.asarray(rates))
+        args = (batch, jnp.asarray(rates))
     else:
         if len(schedules) != s:
             raise ValueError(f"schedules {len(schedules)} != specs {s}")
@@ -650,12 +739,30 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
         sbatch, kmax = stack_schedules(schedules, shape.n, k_pad)
         runner = get_batch_runner(shape.n, shape.p, shape.c, shape.d, cfg,
                                   resolve_alloc(cfg.alloc), kmax)
-        raw = runner(batch, jnp.asarray(rates), sbatch)
+        args = (batch, jnp.asarray(rates), sbatch)
+    # dispatch vs wait split (DESIGN.md §13): the dispatch span covers
+    # trace+compile on a cold executable (jit compiles synchronously at
+    # dispatch) plus argument transfer; the wait span is the device
+    # execution tail (`block_until_ready`).  A span with cold=True is a
+    # compile; warm dispatches are microseconds.
+    variants = runner._cache_size() if _tracing() else 0
+    with _span("sim.dispatch", cat="sim", specs=s, shape=str(shape),
+               kind="static" if schedules is None else "workload") as sp:
+        raw = runner(*args)
+        if _tracing():
+            d = runner._cache_size() - variants
+            sp.set(cold=d > 0, compiled_variants=d)
+    with _span("sim.wait", cat="sim", specs=s):
+        raw = jax.block_until_ready(raw)
     delivered = np.asarray(raw[0])             # [S, R]
     offered = np.asarray(raw[1])
     accepted = np.asarray(raw[2])
     lat_sum = np.asarray(raw[3]).astype(np.int64).sum(axis=2)  # [S, R]
     meas = cfg.cycles - cfg.warmup
+    tel = None
+    if cfg.telemetry:
+        off = 8 if schedules is not None else 4
+        tel = tuple(np.asarray(raw[off + j]) for j in range(6))
     out = []
     for i, spec in enumerate(specs):
         norm = spec.n * meas
@@ -682,6 +789,19 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
                 throughput_ph=dp / ph_norm,
                 latency_ph=lp / np.maximum(dp, 1),
                 offered_rate_ph=op / ph_norm)
+        if tel is not None:
+            # flight-recorder slices: drop the sacrificial channel row
+            # and every padded channel/node lane (rows beyond the spec's
+            # own c/n) so telemetry never reports pad slots
+            t_busy, t_stall, t_occ, t_inj, t_ej, t_hist = tel
+            c, n = spec.c, spec.n
+            busy = t_busy[i, :, :c]                        # [R, c]
+            res.update(
+                link_busy=busy, link_stall=t_stall[i, :, :c],
+                link_occ_sum=t_occ[i, :, :c, :],
+                link_util=busy / float(meas),
+                inj_node=t_inj[i, :, :n], eject_node=t_ej[i, :, :n],
+                lat_hist=t_hist[i])
         out.append(res)
     return out
 

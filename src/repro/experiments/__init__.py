@@ -22,6 +22,14 @@ The pipeline reproduces the legacy paths bitwise on identical grids
 traffic registries and rate grids; execution lowers onto the same
 padded `SweepEngine` batches, whose padding invariance makes results
 independent of how scenarios are grouped.
+
+Observability (DESIGN.md §13): run with `SimConfig(telemetry=True)` and
+the frame carries per-link flight-recorder counters — tidy rows gain
+`link_util_p95` / `link_util_max` / `link_gini`, and
+`ResultFrame.link_rows` / `all_link_rows` / `to_link_csv` render the
+per-channel heatmap (see `repro.obs`).  Planning and execution are
+span-traced (`repro.obs.trace`); enable tracing and call
+`save_chrome_trace` for a Perfetto-loadable phase breakdown.
 """
 from .execute import engine_for, execute, run
 from .frame import COLUMNS, ResultFrame, scenario_row

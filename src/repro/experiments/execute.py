@@ -14,18 +14,33 @@ Scale/robustness knobs:
     one compiled program per bucket shape);
   * `on_error="skip"` isolates partial failures: a chunk that raises
     marks only its own scenarios `status="failed"` (with the error
-    message in the row) and the rest of the experiment completes;
+    message in the row), logs an `execute.chunk_failed` metrics event
+    with the skip reason (`repro.obs.metrics`), and the rest of the
+    experiment completes;
   * engines are shared per `SimConfig` (`engine_for`), so every
     experiment, benchmark and deprecation shim in a process reuses one
     compiled-executable cache.
+
+Observability (DESIGN.md §13): execution is span-traced (`execute` /
+per-chunk `execute.chunk` spans nest over the engine's `sweep.group`
+and the simulator's `sim.dispatch`/`sim.wait` spans), and the progress
+callback can opt into per-chunk timing: a 4-parameter callback
+`progress(done, total, key, info)` receives an `info` dict with
+`elapsed_s`, `compiled` (runner-cache misses this chunk), `scenarios`
+and `status`; the historical 3-parameter `progress(done, total, key)`
+form keeps working unchanged.
 """
 from __future__ import annotations
 
+import inspect
+import time
 from typing import Callable
 
 import numpy as np
 
 from repro.core.simulator import SimConfig
+from repro.obs.metrics import cache_counters, metrics
+from repro.obs.trace import trace
 from repro.sweep.engine import SweepEngine
 
 from .frame import ResultFrame, _identity_row, scenario_row
@@ -48,6 +63,20 @@ def _chunks(items: list, size: int | None):
         return
     for i in range(0, len(items), size):
         yield items[i:i + size]
+
+
+def _progress_arity(cb) -> int:
+    """How many positional args `cb` accepts (legacy callbacks take 3:
+    done, total, key; observability-aware ones take 4: ..., info)."""
+    try:
+        params = [p for p in inspect.signature(cb).parameters.values()
+                  if p.kind in (p.POSITIONAL_ONLY,
+                                p.POSITIONAL_OR_KEYWORD)]
+        var = any(p.kind == p.VAR_POSITIONAL
+                  for p in inspect.signature(cb).parameters.values())
+        return 4 if var or len(params) >= 4 else 3
+    except (TypeError, ValueError):      # builtins / C callables
+        return 3
 
 
 def _run_chunk(engine: SweepEngine, bucket: Bucket, chunk: list,
@@ -81,29 +110,56 @@ def execute(pl: Plan, engine: SweepEngine | None = None,
     for i, reason in pl.skipped:
         rows[i] = _identity_row(exp, exp.scenarios[i], "invalid", reason)
     total, done = pl.n_planned, 0
-    for bucket in pl.buckets:
-        for chunk in _chunks(bucket.items, chunk_size):
-            try:
-                out = _run_chunk(engine, bucket, chunk,
-                                 single_program=pl.single_program)
-            except Exception as e:           # noqa: BLE001 — isolate chunk
-                if on_error == "raise":
-                    raise
-                msg = f"{type(e).__name__}: {e}"
-                for ps in chunk:
-                    planned[ps.index] = ps
-                    errors.append((ps.index, msg))
-                    rows[ps.index] = _identity_row(exp, ps.scenario,
-                                                   "failed", msg)
-                out = None
-            if out is not None:
-                for ps, res in zip(chunk, out):
-                    planned[ps.index] = ps
-                    results[ps.index] = res
-                    rows[ps.index] = scenario_row(exp, ps, res)
-            done += len(chunk)
-            if progress is not None:
-                progress(done, total, bucket.key)
+    arity = _progress_arity(progress) if progress is not None else 0
+    with trace("experiment.execute", cat="experiments",
+               experiment=exp.name, scenarios=n,
+               buckets=len(pl.buckets)):
+        for bucket in pl.buckets:
+            for chunk in _chunks(bucket.items, chunk_size):
+                t0 = time.perf_counter()
+                misses0 = cache_counters()["cache.runner.misses"]
+                status = "ok"
+                with trace("execute.chunk", cat="experiments",
+                           kind=bucket.key.kind,
+                           scenarios=len(chunk)) as sp:
+                    try:
+                        out = _run_chunk(engine, bucket, chunk,
+                                         single_program=pl.single_program)
+                    except Exception as e:   # noqa: BLE001 — isolate chunk
+                        if on_error == "raise":
+                            raise
+                        status = "failed"
+                        msg = f"{type(e).__name__}: {e}"
+                        sp.set(error=msg)
+                        # a skipped chunk is never silent: the skip
+                        # reason lands in the metrics event log too
+                        metrics.event(
+                            "execute.chunk_failed", experiment=exp.name,
+                            reason=msg, scenarios=len(chunk),
+                            bucket=str(bucket.key),
+                            indices=[ps.index for ps in chunk])
+                        for ps in chunk:
+                            planned[ps.index] = ps
+                            errors.append((ps.index, msg))
+                            rows[ps.index] = _identity_row(
+                                exp, ps.scenario, "failed", msg)
+                        out = None
+                if out is not None:
+                    for ps, res in zip(chunk, out):
+                        planned[ps.index] = ps
+                        results[ps.index] = res
+                        rows[ps.index] = scenario_row(exp, ps, res)
+                done += len(chunk)
+                if progress is not None:
+                    if arity >= 4:
+                        info = dict(
+                            elapsed_s=time.perf_counter() - t0,
+                            compiled=cache_counters()
+                            ["cache.runner.misses"] - misses0,
+                            scenarios=len(chunk), status=status)
+                        progress(done, total, bucket.key, info)
+                    else:
+                        progress(done, total, bucket.key)
     return ResultFrame(experiment=exp, rows=rows, results=results,
                        planned=planned, errors=errors)
 

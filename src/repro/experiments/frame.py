@@ -32,7 +32,8 @@ COLUMNS = (
     "faults", "failed_links", "failed_chiplets",
     "analytic_saturation", "sim_saturation", "rel_throughput",
     "abs_throughput_gbps", "latency_ns", "avg_hops", "chiplet_area_mm2",
-    "phy_area_frac", "power_w", "max_link_mm", "radix", "error",
+    "phy_area_frac", "power_w", "max_link_mm", "radix",
+    "link_util_p95", "link_util_max", "link_gini", "error",
 )
 
 
@@ -67,6 +68,15 @@ def scenario_row(exp: Experiment, ps: PlannedScenario,
         t_r = float(res["throughput"][k])
         lat = float(res["latency"][k])
         row["sim_saturation"] = t_r
+        if "link_util" in res:           # flight recorder was on
+            from repro.obs.report import gini
+            util = np.asarray(res["link_util"][k], np.float64)
+            if util.size:
+                row.update(
+                    link_util_p95=round(
+                        float(np.percentile(util, 95)), 6),
+                    link_util_max=round(float(util.max()), 6),
+                    link_gini=round(gini(util), 6))
     else:
         t_r = ps.analytic
         lat = zero_load_latency(ps.routing, ps.traffic)
@@ -150,6 +160,37 @@ class ResultFrame:
                    offered_rate_ph=res["offered_rate_ph"][k],
                    phase_cycles=res["phase_cycles"])
         return out
+
+    # ---- flight-recorder views (DESIGN.md §13) ------------------------
+    def link_rows(self, i: int, rate_index: int | None = None) -> list:
+        """Tidy per-link telemetry rows for scenario i (requires the
+        experiment to have run with `SimConfig(telemetry=True)`)."""
+        from repro.obs.flight import link_rows as _rows
+        ps, res = self.planned[i], self.results[i]
+        if ps is None or res is None:
+            return []
+        cfg = self.experiment.cfg
+        return _rows(ps, res, cfg.cycles - cfg.warmup,
+                     experiment=self.experiment.name,
+                     rate_index=rate_index)
+
+    def all_link_rows(self, rate_index: int | None = None) -> list:
+        """Per-link rows for every ok scenario, in scenario order."""
+        out: list = []
+        for i in range(len(self.rows)):
+            out.extend(self.link_rows(i, rate_index=rate_index))
+        return out
+
+    def to_link_csv(self, path: str,
+                    rate_index: int | None = None) -> None:
+        """Write the per-link heatmap CSV (schema v3) for this frame."""
+        from repro.obs.flight import LINK_COLUMNS
+        rows = self.all_link_rows(rate_index=rate_index)
+        extra = [k for r in rows for k in r if k not in LINK_COLUMNS]
+        seen: dict = {}
+        for k in extra:
+            seen.setdefault(k, None)
+        xio.write_csv(path, rows, columns=list(LINK_COLUMNS) + list(seen))
 
     # ---- versioned writers --------------------------------------------
     def to_csv(self, path: str, include_failures: bool = False) -> None:

@@ -24,7 +24,11 @@ import numpy as np
 #: bump on any breaking change to result-row derivation or layout
 #: v2: fault columns (faults, failed_links, failed_chiplets) joined the
 #: stable tidy-row layout (DESIGN.md §12)
-SCHEMA_VERSION = 2
+#: v3: flight-recorder telemetry (DESIGN.md §13) — tidy rows gain
+#: link_util_p95 / link_util_max / link_gini, and per-link heatmap
+#: artifacts (obs.flight.LINK_COLUMNS, obs.report.SUMMARY_COLUMNS)
+#: share this stamp
+SCHEMA_VERSION = 3
 
 
 def stable_columns(rows: Sequence[dict],

@@ -31,6 +31,7 @@ from repro.core import traffic as TR
 from repro.core.routing import cached_routing, routing_for
 from repro.faults import FaultError
 from repro.core.simulator import SimSpec, make_spec
+from repro.obs.trace import trace
 from repro.sweep.engine import SweepEngine, _round_up
 from repro.sweep.padding import PadShape
 
@@ -207,41 +208,47 @@ def plan(experiment: Experiment, engine: SweepEngine | None = None,
     sim_backend = experiment.backend == "sim"
     buckets: dict[BucketKey, Bucket] = {}
     skipped: list = []
-    for i, s in enumerate(experiment.scenarios):
-        if not s.valid:
-            skipped.append((i, f"{s.topology_name} does not support "
-                               f"N={s.n} (topology.N_CONSTRAINTS)"))
-            continue
-        try:
-            topo, routing = resolve_topology(s)
-        except FaultError as e:
-            # un-applyable fault set (disconnects the survivors, names a
-            # non-existent link, ...): skip with the sampler-actionable
-            # reason rather than aborting the whole grid
-            skipped.append((i, f"fault set rejected: {e}"))
-            continue
-        tm, schedule = _resolve_traffic(s, topo, meas)
-        analytic = routing.saturation_rate(tm)
-        spec = sched_spec = rates = None
-        if sim_backend:
-            spec = make_spec(routing, tm)
-            sched_spec = schedule.compile() if schedule is not None else None
-            rates = np.asarray(s.rates.resolve(analytic), np.float64)
-            shape = engine.bucket_shape(
-                PadShape(n=spec.n, p=spec.p, c=spec.c, d=spec.d))
-            k = sched_spec.k if sched_spec is not None else 0
-            k_pad = _round_up(k, engine.k_round) if engine.bucket and k \
-                else k
-            key = BucketKey(kind=s.kind, n_rates=len(rates), shape=shape,
-                            k_pad=k_pad)
-        else:
-            key = BucketKey(kind="analytic", n_rates=0, shape=None, k_pad=0)
-        ps = PlannedScenario(index=i, scenario=s, topo=topo,
-                             routing=routing, traffic=tm,
-                             analytic=float(analytic), spec=spec,
-                             schedule=schedule, sched_spec=sched_spec,
-                             rates=rates)
-        buckets.setdefault(key, Bucket(key=key, items=[])).items.append(ps)
+    with trace("experiment.plan", cat="experiments",
+               experiment=experiment.name,
+               scenarios=len(experiment.scenarios)):
+        for i, s in enumerate(experiment.scenarios):
+            if not s.valid:
+                skipped.append((i, f"{s.topology_name} does not support "
+                                   f"N={s.n} (topology.N_CONSTRAINTS)"))
+                continue
+            try:
+                topo, routing = resolve_topology(s)
+            except FaultError as e:
+                # un-applyable fault set (disconnects the survivors,
+                # names a non-existent link, ...): skip with the
+                # sampler-actionable reason rather than aborting the grid
+                skipped.append((i, f"fault set rejected: {e}"))
+                continue
+            tm, schedule = _resolve_traffic(s, topo, meas)
+            analytic = routing.saturation_rate(tm)
+            spec = sched_spec = rates = None
+            if sim_backend:
+                spec = make_spec(routing, tm)
+                sched_spec = schedule.compile() \
+                    if schedule is not None else None
+                rates = np.asarray(s.rates.resolve(analytic), np.float64)
+                shape = engine.bucket_shape(
+                    PadShape(n=spec.n, p=spec.p, c=spec.c, d=spec.d))
+                k = sched_spec.k if sched_spec is not None else 0
+                k_pad = _round_up(k, engine.k_round) \
+                    if engine.bucket and k else k
+                key = BucketKey(kind=s.kind, n_rates=len(rates),
+                                shape=shape, k_pad=k_pad)
+            else:
+                key = BucketKey(kind="analytic", n_rates=0, shape=None,
+                                k_pad=0)
+            ps = PlannedScenario(index=i, scenario=s, topo=topo,
+                                 routing=routing, traffic=tm,
+                                 analytic=float(analytic), spec=spec,
+                                 schedule=schedule, sched_spec=sched_spec,
+                                 rates=rates)
+            buckets.setdefault(key,
+                               Bucket(key=key, items=[])).items.append(ps)
     out = list(buckets.values())
     if single_program and sim_backend:
         merged: dict[tuple, Bucket] = {}

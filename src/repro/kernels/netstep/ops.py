@@ -3,7 +3,13 @@
 `netstep` is the allocation hot loop the batched simulator dispatches to
 when `SimConfig.alloc` resolves to "pallas" (auto on TPU).  On CPU the
 kernel runs in interpret mode — correct but slow, so the simulator
-defaults to the pure-jnp oracle there."""
+defaults to the pure-jnp oracle there.
+
+Telemetry neutrality (DESIGN.md §13): the flight recorder observes the
+allocation *outputs* (win_mask and the masks the step derives from it)
+— it never reaches into the kernel, so `SimConfig(telemetry=...)` can
+not change which impl runs or what it computes, and the kernel needs no
+recompile when telemetry toggles."""
 import jax
 
 from .netstep import netstep_pallas

@@ -1,7 +1,11 @@
 """Oracle for the netstep kernel — mirrors the allocation arithmetic of
 repro.core.simulator on pre-computed (op_slot, eligible).  `rr` is a
 scalar, or an (rr_vc, rr_port) pair rotating the two phases separately
-(the batched simulator's convention, DESIGN.md §6)."""
+(the batched simulator's convention, DESIGN.md §6).
+
+Like the kernel it checks, the oracle is telemetry-neutral: the flight
+recorder (DESIGN.md §13) consumes allocation outputs downstream and
+never alters this arithmetic."""
 import jax
 import jax.numpy as jnp
 

@@ -1,0 +1,18 @@
+"""Opt-in observability (DESIGN.md §13): tracing, metrics, flight data.
+
+Two halves, both off by default and bitwise-inert when off:
+
+  * **host-side**: `trace(...)` spans (Chrome-trace/Perfetto JSON via
+    `save_chrome_trace`) and a process-wide `metrics` registry (counters,
+    events, JSONL log) that also absorbs the simulator/routing cache
+    hit/miss/eviction counters;
+  * **in-sim**: the flight recorder — `SimConfig(telemetry=True)` makes
+    the batched simulator carry per-link/per-port counter tensors
+    through the scan; `obs.flight` turns them into tidy per-link rows
+    and `obs.report` into link-load heatmap/summary CSVs.
+"""
+from .trace import (Span, clear_trace, disable_tracing, enable_tracing,  # noqa
+                    get_spans, save_chrome_trace, trace, tracing_enabled)
+from .metrics import (MetricsRegistry, cache_counters, metrics)  # noqa
+from .flight import link_rows, LINK_COLUMNS  # noqa
+from .report import gini, link_load_summary, write_link_reports  # noqa

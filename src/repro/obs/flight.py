@@ -1,0 +1,124 @@
+"""Flight-recorder post-processing: telemetry tensors -> tidy link rows.
+
+`SimConfig(telemetry=True)` makes `run_batch` return per-directed-
+channel counter arrays (DESIGN.md §13).  This module renders them as
+tidy rows — one row per directed channel of the *simulated* structure,
+plus one `status="dead"` row per direction of every fault-masked link —
+so the load distribution that explains the paper's results (folding
+spreads channel load; Mesh/Torus concentrate it) is a first-class,
+versioned artifact instead of an aggregate.
+
+Row discipline:
+
+  * sacrificial and padded lanes never appear: `run_batch` slices the
+    counter tensors to the spec's own channel/node counts before they
+    reach this module;
+  * a degraded scenario reports its surviving channels from the
+    *degraded* routing (they carry the traffic) and its dead links from
+    the fault set — explicitly failed links, plus every base-topology
+    link incident to a dead chiplet;
+  * `util` is busy cycles / measured cycles in [0, 1]; `occ_mean` is
+    the mean number of buffered flits at the channel's downstream input
+    port over the measured window.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+#: stable tidy-row column order for per-link rows (scenario tags append)
+LINK_COLUMNS = (
+    "experiment", "topology", "n", "substrate", "traffic", "faults",
+    "status", "rate", "channel", "src", "dst", "len_mm", "depth_cycles",
+    "busy", "util", "stalls", "occ_mean",
+)
+
+
+def _base_topology(scenario):
+    """The pristine topology a degraded scenario was derived from, or
+    None when it cannot be rebuilt (exotic generator callables)."""
+    from repro.core import topology as T
+    t = scenario.topology
+    try:
+        if isinstance(t, str):
+            return T.build(t, scenario.n,
+                           substrate=scenario.resolved_substrate,
+                           chiplet_area_mm2=scenario.resolved_area,
+                           roles_scheme=scenario.roles)
+        if isinstance(t, T.Topology):
+            return t
+        src = t(scenario.n)
+        if isinstance(src, T.Topology):
+            return src
+        name, pos, edges = src
+        return T.make_topology(name, pos, edges)
+    except Exception:                     # noqa: BLE001 — best effort
+        return None
+
+
+def dead_links(scenario) -> list[tuple[int, int]]:
+    """Undirected (u, v) pairs masked out by the scenario's fault set:
+    the explicitly failed links plus every base-topology link incident
+    to a dead chiplet.  Pristine scenarios have none."""
+    if not getattr(scenario, "degraded", False):
+        return []
+    fs = scenario.faults
+    dead = set(fs.links)
+    if fs.chiplets:
+        base = _base_topology(scenario)
+        if base is not None:
+            dc = set(fs.chiplets)
+            for a, b in np.sort(np.asarray(base.edges, np.int64), axis=1):
+                if int(a) in dc or int(b) in dc:
+                    dead.add((int(a), int(b)))
+    return sorted(dead)
+
+
+def link_rows(planned, res: dict, meas: int, *, experiment: str = "",
+              rate_index: int | None = None) -> list[dict]:
+    """Tidy per-link rows for one executed scenario.
+
+    planned: a `repro.experiments.plan.PlannedScenario` (duck-typed:
+    needs `.scenario`, `.routing`, `.spec`); res: its engine result
+    dict carrying the `simulator.TELEMETRY_KEYS`; meas: measured cycles
+    (`cfg.cycles - cfg.warmup`).  rate_index picks the offered-rate row
+    (default: the saturation plateau, argmax delivered throughput —
+    the same row the tidy scenario metrics report).
+    """
+    if "link_busy" not in res:
+        raise ValueError(
+            "result carries no telemetry — run with "
+            "SimConfig(telemetry=True) to record the flight data")
+    s = planned.scenario
+    routing = planned.routing
+    k = int(np.argmax(res["throughput"])) if rate_index is None \
+        else int(rate_index)
+    rate = float(res["rate"][k])
+    busy = np.asarray(res["link_busy"][k])          # [c]
+    stall = np.asarray(res["link_stall"][k])        # [c]
+    occ = np.asarray(res["link_occ_sum"][k])        # [c, V]
+    util = busy / float(max(meas, 1))
+    occ_mean = occ.sum(axis=1) / float(max(meas, 1))
+    depth = planned.spec.ch_depth if planned.spec is not None else None
+    tags = dict(s.tags)
+
+    def row(**kw):
+        r = dict.fromkeys(LINK_COLUMNS)
+        r.update(experiment=experiment, topology=s.topology_name, n=s.n,
+                 substrate=s.resolved_substrate, traffic=s.traffic_name,
+                 faults=s.fault_name, rate=rate, **kw)
+        r.update(tags)
+        return r
+
+    rows = [row(status="ok", channel=c,
+                src=int(routing.ch_src[c]), dst=int(routing.ch_dst[c]),
+                len_mm=round(float(routing.ch_len_mm[c]), 3),
+                depth_cycles=int(depth[c]) if depth is not None else None,
+                busy=int(busy[c]), util=round(float(util[c]), 6),
+                stalls=int(stall[c]),
+                occ_mean=round(float(occ_mean[c]), 4))
+            for c in range(len(busy))]
+    for u, v in dead_links(s):
+        for a, b in ((u, v), (v, u)):
+            rows.append(row(status="dead", channel=-1, src=a, dst=b,
+                            busy=0, util=0.0, stalls=0, occ_mean=0.0))
+    return rows

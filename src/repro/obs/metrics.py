@@ -1,0 +1,138 @@
+"""Unified metrics registry (DESIGN.md §13): counters, events, JSONL.
+
+One process-wide `metrics` instance gathers the host-side numbers that
+used to live in ad-hoc dicts: sweep-engine run/compile stats, executor
+chunk outcomes, synthesis generation counts.  Three primitives:
+
+  * `inc(name, n)` — monotonic counters (thread-safe);
+  * `observe(name, value)` — running count/sum/min/max of a value
+    (wall-clock seconds, batch sizes, ...);
+  * `event(name, **fields)` — an append-only structured log entry,
+    wall-clock stamped, optionally mirrored to a JSONL sink file
+    (`set_sink`), so failures and skips are never silent.
+
+`snapshot()` additionally absorbs the two LRU caches that predate this
+registry — `simulator.runner_cache_info()` and
+`routing.routing_cache_info()` — under `cache.runner.*` /
+`cache.routing.*` keys, and `cache_counters()` exposes just those
+monotonic hit/miss/eviction counters for before/after deltas (the
+sweep engine counts compiles this way: a *miss* delta counts new
+compiled programs exactly, where the old sum-of-entries subtraction
+could be shrunk by an LRU eviction between the two reads and
+misattribute compiles).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+
+class MetricsRegistry:
+    """Thread-safe counters + observations + structured event log."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: dict[str, float] = {}
+        self._observations: dict[str, dict] = {}
+        self._events: list[dict] = []
+        self._sink: str | None = None
+
+    # ---- counters ------------------------------------------------------
+    def inc(self, name: str, value: float = 1) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + value
+
+    def get(self, name: str, default: float = 0) -> float:
+        with self._lock:
+            return self._counters.get(name, default)
+
+    # ---- observations --------------------------------------------------
+    def observe(self, name: str, value: float) -> None:
+        with self._lock:
+            o = self._observations.get(name)
+            if o is None:
+                o = self._observations[name] = dict(
+                    count=0, sum=0.0, min=value, max=value)
+            o["count"] += 1
+            o["sum"] += value
+            o["min"] = min(o["min"], value)
+            o["max"] = max(o["max"], value)
+
+    # ---- events --------------------------------------------------------
+    def set_sink(self, path: str | None) -> None:
+        """Mirror every subsequent event to `path` as one JSON line."""
+        if path is not None:
+            d = os.path.dirname(os.path.abspath(path))
+            os.makedirs(d, exist_ok=True)
+        with self._lock:
+            self._sink = path
+
+    def event(self, name: str, **fields) -> dict:
+        e = dict(event=name, t=time.time(), **fields)
+        with self._lock:
+            self._events.append(e)
+            sink = self._sink
+        if sink is not None:
+            with open(sink, "a") as f:
+                f.write(json.dumps(e, default=str) + "\n")
+        return e
+
+    def events(self, name: str | None = None) -> list[dict]:
+        with self._lock:
+            evs = list(self._events)
+        return evs if name is None else [e for e in evs
+                                         if e["event"] == name]
+
+    def save_jsonl(self, path: str) -> int:
+        """Write the full event log (one JSON object per line)."""
+        evs = self.events()
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            for e in evs:
+                f.write(json.dumps(e, default=str) + "\n")
+        print(f"[obs] wrote {path} ({len(evs)} events)")
+        return len(evs)
+
+    # ---- snapshots -----------------------------------------------------
+    def snapshot(self) -> dict:
+        """Counters + observations + absorbed cache counters."""
+        with self._lock:
+            out = dict(self._counters)
+            out.update({k: dict(v) for k, v in self._observations.items()})
+        out.update(cache_counters())
+        return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._observations.clear()
+            self._events.clear()
+
+
+def cache_counters() -> dict:
+    """Monotonic hit/miss/eviction counters of the two pre-registry
+    LRUs, flattened under stable keys.  Misses count cache *builds*
+    (compiled runners / routed structures), so a before/after miss
+    delta counts new work exactly — immune to concurrent evictions,
+    unlike differencing the caches' entry sums."""
+    from repro.core.routing import routing_cache_info
+    from repro.core.simulator import runner_cache_info
+    r = runner_cache_info()
+    t = routing_cache_info()
+    return {
+        "cache.runner.hits": r["hits"],
+        "cache.runner.misses": r["misses"],
+        "cache.runner.evictions": r["evictions"],
+        "cache.runner.size": r["size"],
+        "cache.routing.hits": t["hits"],
+        "cache.routing.misses": t["misses"],
+        "cache.routing.evictions": t["evictions"],
+        "cache.routing.size": t["size"],
+    }
+
+
+#: process-wide registry (import `from repro.obs import metrics`)
+metrics = MetricsRegistry()

@@ -33,6 +33,8 @@ from repro.core import topology as T
 from repro.core import traffic as TR
 from repro.core.routing import cached_routing
 from repro.core.simulator import SimConfig, SimSpec
+from repro.obs.metrics import cache_counters, metrics
+from repro.obs.trace import trace
 
 from .padding import PadShape
 
@@ -150,7 +152,12 @@ class SweepEngine:
                     k_bucket(i))
                 groups.setdefault(key, []).append(i)
 
-        before = sum(sim.runner_cache_info()["entries"].values())
+        # compile accounting via the metrics registry's monotonic cache
+        # counters (DESIGN.md §13): a runner-cache *miss* delta counts
+        # new compiled programs exactly.  The old before/after subtraction
+        # of sum(entries.values()) shrank when the LRU evicted a runner
+        # between the two reads and misattributed compiles.
+        before = cache_counters()["cache.runner.misses"]
         results: list = [None] * s
         for (shape, k_pad), idxs in groups.items():
             g_specs = [specs[i] for i in idxs]
@@ -169,21 +176,27 @@ class SweepEngine:
                 g_rates = np.concatenate([g_rates, g_rates[-1:]], axis=0)
                 if g_scheds is not None:
                     g_scheds.append(g_scheds[-1])
-            out = sim.run_batch(g_specs, g_rates, self.cfg,
-                                pad_shape=shape, schedules=g_scheds,
-                                k_pad=k_pad or None)
+            with trace("sweep.group", cat="sweep", specs=len(g_specs),
+                       shape=str(shape), k_pad=k_pad,
+                       kind="static" if g_scheds is None else "workload"):
+                out = sim.run_batch(g_specs, g_rates, self.cfg,
+                                    pad_shape=shape, schedules=g_scheds,
+                                    k_pad=k_pad or None)
             for j, i in enumerate(idxs):
                 results[i] = {
                     k: (v[:n_rates] if isinstance(v, np.ndarray)
                         and k not in self._PER_PHASE_KEYS else v)
                     for k, v in out[j].items()}
-        after = sum(sim.runner_cache_info()["entries"].values())
-        compiled = max(after - before, 0)   # LRU eviction can shrink sums
+        compiled = cache_counters()["cache.runner.misses"] - before
         self.stats["runs"] += 1
         self.stats["groups"] += len(groups)
         self.stats["specs"] += s
         self.stats["compiles"] += compiled
         self.stats["reuses"] += max(len(groups) - compiled, 0)
+        metrics.inc("sweep.runs")
+        metrics.inc("sweep.groups", len(groups))
+        metrics.inc("sweep.specs", s)
+        metrics.inc("sweep.compiles", compiled)
         return results
 
     # ---- case-level deprecation shims ----------------------------------

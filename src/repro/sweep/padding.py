@@ -25,6 +25,16 @@ lane influence a real one:
 Together with the simulator's hash-based injection randomness this makes
 batched results bitwise-equal to the single-spec path (tested in
 tests/test_sweep.py).
+
+The flight recorder (`SimConfig(telemetry=True)`, DESIGN.md §13) rides
+on the same discipline in the *output* direction: its per-channel /
+per-node counter tensors are sized to the padded shape (sacrificial row
+C+1, padded node tails), non-contributing lanes are scatter-routed to
+the sacrificial row or weighted 0, and `run_batch` slices every
+telemetry leaf back to the spec's own (c, n) before results leave the
+batch — so telemetry rows can never name a pad slot, and the sliced
+counters are bitwise-equal for any padding of the same spec
+(tests/test_obs.py).
 """
 from __future__ import annotations
 

@@ -27,6 +27,8 @@ import numpy as np
 from repro.core import topology as T
 from repro.core.simulator import SimConfig
 from repro.experiments import io as xio
+from repro.obs.metrics import metrics
+from repro.obs.trace import trace
 
 from .evaluate import (Candidate, MAXIMIZE, evaluate_analytic,
                        objective_matrix, simulate_candidates)
@@ -293,23 +295,32 @@ def run_search(config: SearchConfig | None = None,
         raise ValueError("resume state carries a different SearchConfig")
     cfg = state.config
     if not state.pool and state.generation == 0:
-        _seed_pool(state)
-    evaluate_analytic(state.pool, cfg.traffic)
+        with trace("synth.seed", cat="synth", n=cfg.n,
+                   substrate=cfg.substrate):
+            _seed_pool(state)
+    with trace("synth.analytic", cat="synth", pool=len(state.pool)):
+        evaluate_analytic(state.pool, cfg.traffic)
     target = cfg.generations if pause_after is None \
         else min(pause_after, cfg.generations)
     while state.generation < target:
         g = state.generation + 1
-        _evolve(state, g)
-        evaluate_analytic(state.pool, cfg.traffic)
+        with trace("synth.generation", cat="synth", generation=g,
+                   pool=len(state.pool)):
+            _evolve(state, g)
+            evaluate_analytic(state.pool, cfg.traffic)
         state.generation = g
+        metrics.inc("synth.generations")
         if progress is not None:
             progress(g, cfg.generations, state.stats)
+    metrics.inc("synth.candidates", state.stats["n_generated"])
     if pause_after is not None:           # paused: no stage-2 this call
         return SearchResult(state=state, simulated=[], frame=None)
     sim = _sim_slice(state)
-    frame = simulate_candidates(sim, traffic=cfg.traffic, cfg=cfg.cfg,
-                                n_rates=cfg.n_rates)
+    with trace("synth.simulate", cat="synth", candidates=len(sim)):
+        frame = simulate_candidates(sim, traffic=cfg.traffic, cfg=cfg.cfg,
+                                    n_rates=cfg.n_rates)
     state.stats["n_simulated"] = sum(1 for c in sim if c.simulated)
+    metrics.inc("synth.simulated", state.stats["n_simulated"])
     return SearchResult(state=state, simulated=[c for c in sim
                                                if c.simulated],
                         frame=frame)

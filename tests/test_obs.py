@@ -1,0 +1,407 @@
+"""Observability tests (DESIGN.md §13).
+
+The acceptance properties of the telemetry layer:
+
+  * **off is bitwise free** — `SimConfig(telemetry=True)` must not
+    change a single shared counter vs the telemetry-off run, on static,
+    workload AND fault-degraded scenarios (the flight recorder is a
+    pure observer);
+  * **conservation** — the per-node/per-link counters reconcile exactly
+    with the aggregate counters the simulator already reports
+    (sum(inj_node) == accepted_n, sum(eject_node) == delivered,
+    sum(lat_hist) == delivered);
+  * **padding-invariant** — telemetry sliced from a larger padded batch
+    is bitwise-equal to the tight run, and never names a sacrificial or
+    padded slot.
+
+Plus unit coverage of the host half: tracer semantics, Chrome-trace
+export, the metrics registry, the executor's backwards-compatible
+progress callback, and the engine's eviction-proof compile accounting.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import repro.experiments as X
+import repro.faults as F
+import repro.workloads as W
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.routing import build_routing
+from repro.core.simulator import (LAT_HIST_BINS, TELEMETRY_KEYS,
+                                  SimConfig, make_spec, run_batch)
+from repro.obs.metrics import (MetricsRegistry, cache_counters,
+                               metrics as METRICS)
+from repro.obs.report import gini, link_load_summary
+from repro.obs.trace import (Tracer, clear_trace, disable_tracing,
+                             enable_tracing, get_spans, trace)
+from repro.sweep.engine import SweepEngine
+from repro.sweep.padding import PadShape
+
+CFG = SimConfig(cycles=300, warmup=100)
+TCFG = CFG._replace(telemetry=True)
+MEAS = CFG.cycles - CFG.warmup
+RAW = ("delivered", "offered_n", "accepted_n", "lat_sum")
+RATES = np.array([0.05, 0.2, 0.5], np.float32)
+
+HETERO = [("mesh", 16), ("folded_hexa_torus", 36)]
+
+
+@pytest.fixture(scope="module")
+def specs():
+    out = []
+    for name, n in HETERO:
+        r = build_routing(T.build(name, n))
+        out.append(make_spec(r, TR.uniform(r.topo)))
+    return out
+
+
+@pytest.fixture(autouse=True)
+def _tracing_off():
+    """Every test starts and ends with the process tracer disabled."""
+    disable_tracing()
+    clear_trace()
+    yield
+    disable_tracing()
+    clear_trace()
+
+
+# ---------------------------------------------------------------------
+# flight recorder: bitwise-off, conservation, padding
+# ---------------------------------------------------------------------
+
+def test_telemetry_off_bitwise_identical_static(specs):
+    """Turning the recorder on must not perturb any shared counter."""
+    off = run_batch(specs, RATES, CFG)
+    on = run_batch(specs, RATES, TCFG)
+    for o, t in zip(off, on):
+        for k in RAW:
+            np.testing.assert_array_equal(o[k], t[k], err_msg=k)
+        np.testing.assert_array_equal(o["throughput"], t["throughput"])
+        np.testing.assert_array_equal(o["latency"], t["latency"])
+        assert all(k in t for k in TELEMETRY_KEYS)
+        assert not any(k in o for k in TELEMETRY_KEYS)
+
+
+def test_telemetry_off_bitwise_identical_workload():
+    topo = T.build("folded_hexa_torus", 16)
+    r = build_routing(topo)
+    sched = W.phase_alternating(topo, phase_cycles=60, repeats=1).fit(MEAS)
+    spec = make_spec(r, sched.mean_traffic())
+    eng_off = SweepEngine(cfg=CFG)
+    eng_on = SweepEngine(cfg=TCFG)
+    off = eng_off.run_workloads([spec], [sched], RATES)[0]
+    on = eng_on.run_workloads([spec], [sched], RATES)[0]
+    for k in RAW + ("delivered_ph", "lat_sum_ph"):
+        np.testing.assert_array_equal(off[k], on[k], err_msg=k)
+    assert "link_busy" in on and "link_busy" not in off
+
+
+def test_telemetry_off_bitwise_identical_faults():
+    topo = T.build("folded_hexa_torus", 36)
+    fs = F.sample_faults(topo, 2, "random", seed=0)
+    mk = lambda cfg: X.Experiment(
+        [X.Scenario("folded_hexa_torus", 36, faults=fs,
+                    rates=X.ExplicitRates((0.1, 0.3)))], cfg=cfg)
+    off = X.run(mk(CFG), engine=SweepEngine(cfg=CFG))
+    on = X.run(mk(TCFG), engine=SweepEngine(cfg=TCFG))
+    for k in RAW:
+        np.testing.assert_array_equal(off.results[0][k], on.results[0][k],
+                                      err_msg=k)
+
+
+def test_telemetry_conservation(specs):
+    """Flight counters reconcile EXACTLY with the aggregate counters."""
+    out = run_batch(specs, RATES, TCFG)
+    for spec, res in zip(specs, out):
+        np.testing.assert_array_equal(res["inj_node"].sum(axis=1),
+                                      res["accepted_n"])
+        np.testing.assert_array_equal(res["eject_node"].sum(axis=1),
+                                      res["delivered"])
+        np.testing.assert_array_equal(res["lat_hist"].sum(axis=1),
+                                      res["delivered"])
+        # each delivered flit traversed >= 1 link; busy counts them all
+        assert (res["link_busy"].sum(axis=1) >= res["delivered"]).all()
+        util = res["link_util"]
+        assert (util >= 0).all() and (util <= 1).all()
+        assert (res["link_stall"] >= 0).all()
+        assert res["lat_hist"].shape == (len(RATES), LAT_HIST_BINS)
+
+
+def test_telemetry_padding_invariant(specs):
+    """Telemetry sliced from a fat padded batch == the tight batch, and
+    its leaves are sized to the spec's own (c, n) — pad slots and the
+    sacrificial row can never leak into a report."""
+    tight = run_batch(specs, RATES, TCFG)
+    shape = PadShape.of(specs)
+    fat = PadShape(n=shape.n + 7, p=shape.p + 2, c=shape.c + 19,
+                   d=shape.d + 3)
+    padded = run_batch(specs, RATES, TCFG, pad_shape=fat)
+    for spec, a, b in zip(specs, tight, padded):
+        for k in TELEMETRY_KEYS:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+        assert b["link_busy"].shape == (len(RATES), spec.c)
+        assert b["inj_node"].shape == (len(RATES), spec.n)
+        assert b["link_occ_sum"].shape[:2] == (len(RATES), spec.c)
+
+
+def test_link_rows_and_frame_columns(tmp_path):
+    """Tidy per-link rows cover exactly the routed channels, tidy rows
+    gain the distribution columns, and the CSV writers round-trip."""
+    exp = X.Experiment([X.Scenario("mesh", 16,
+                                   rates=X.ExplicitRates((0.1, 0.4))),
+                        X.Scenario("folded_hexa_torus", 16,
+                                   rates=X.ExplicitRates((0.1, 0.4)))],
+                       cfg=TCFG, name="obs_unit")
+    frame = X.run(exp, engine=SweepEngine(cfg=TCFG))
+    for i in range(2):
+        rows = frame.link_rows(i)
+        routing = frame.planned[i].routing
+        assert len(rows) == len(routing.ch_src)          # all ok, no dead
+        assert all(r["status"] == "ok" for r in rows)
+        assert {r["channel"] for r in rows} == set(range(len(rows)))
+        srcs = {(r["src"], r["dst"]) for r in rows}
+        want = {(int(s), int(d)) for s, d in
+                zip(routing.ch_src, routing.ch_dst)}
+        assert srcs == want
+        assert frame.rows[i]["link_gini"] is not None
+        assert 0.0 <= frame.rows[i]["link_gini"] <= 1.0
+        assert frame.rows[i]["link_util_max"] >= \
+            frame.rows[i]["link_util_p95"]
+    path = str(tmp_path / "links.csv")
+    frame.to_link_csv(path)
+    header = open(path).readline().strip().split(",")
+    assert header[0] == "schema_version" and "util" in header
+    # summary distribution stats per topology cell
+    summary = link_load_summary(frame.all_link_rows())
+    assert len(summary) == 2
+    for s in summary:
+        assert s["n_dead"] == 0 and s["util_max"] >= s["util_p95"]
+
+
+def test_link_rows_report_dead_links():
+    topo = T.build("folded_hexa_torus", 36)
+    fs = F.sample_faults(topo, 2, "random", seed=0)
+    exp = X.Experiment([X.Scenario("folded_hexa_torus", 36, faults=fs,
+                                   rates=X.ExplicitRates((0.1, 0.3)))],
+                       cfg=TCFG)
+    frame = X.run(exp, engine=SweepEngine(cfg=TCFG))
+    rows = frame.link_rows(0)
+    dead = [r for r in rows if r["status"] == "dead"]
+    ok = [r for r in rows if r["status"] == "ok"]
+    assert len(dead) == 2 * fs.n_links          # both directions
+    assert {(r["src"], r["dst"]) for r in dead} == \
+        {(u, v) for a, b in fs.links for u, v in ((a, b), (b, a))}
+    assert all(r["busy"] == 0 and r["channel"] == -1 for r in dead)
+    # surviving channels are the degraded routing's channels
+    assert len(ok) == len(frame.planned[0].routing.ch_src)
+    # no dead link appears among the surviving directed channels
+    assert not ({(r["src"], r["dst"]) for r in ok}
+                & {(r["src"], r["dst"]) for r in dead})
+
+
+def test_link_rows_require_telemetry():
+    exp = X.Experiment([X.Scenario("mesh", 16,
+                                   rates=X.ExplicitRates((0.1,)))],
+                       cfg=CFG)
+    frame = X.run(exp, engine=SweepEngine(cfg=CFG))
+    with pytest.raises(ValueError, match="telemetry"):
+        frame.link_rows(0)
+
+
+def test_gini():
+    assert gini([1, 1, 1, 1]) == pytest.approx(0.0)
+    assert gini([0, 0, 0, 8]) == pytest.approx(0.75)
+    assert gini([]) == 0.0
+    assert gini([0.0, 0.0]) == 0.0
+
+
+# ---------------------------------------------------------------------
+# host half: tracer + metrics
+# ---------------------------------------------------------------------
+
+def test_tracer_records_spans_and_attrs():
+    tr = Tracer()
+    with tr.trace("outer", cat="test", a=1):
+        with tr.trace("inner") as sp:
+            sp.set(cold=True)
+    assert not tr.spans()                      # disabled: nothing kept
+    tr.enable()
+    with tr.trace("outer", cat="test", a=1):
+        with tr.trace("inner") as sp:
+            sp.set(cold=True)
+    spans = tr.spans()
+    assert [s.name for s in spans] == ["inner", "outer"]  # close order
+    inner, outer = spans
+    assert inner.args["cold"] is True and outer.args["a"] == 1
+    assert outer.dur >= inner.dur >= 0
+    assert outer.ts <= inner.ts <= inner.ts + inner.dur \
+        <= outer.ts + outer.dur
+
+
+def test_tracer_records_exceptions():
+    tr = Tracer()
+    tr.enable()
+    with pytest.raises(RuntimeError):
+        with tr.trace("boom"):
+            raise RuntimeError("x")
+    (sp,) = tr.spans()
+    assert sp.args["error"] == "RuntimeError"
+
+
+def test_chrome_trace_export(tmp_path):
+    tr = Tracer()
+    tr.enable()
+    with tr.trace("phase", cat="test", shape="(1, 2)"):
+        pass
+    path = str(tmp_path / "trace.json")
+    n = tr.save_chrome_trace(path, metadata=dict(run="unit"))
+    assert n == 1
+    doc = json.load(open(path))
+    (ev,) = doc["traceEvents"]
+    assert ev["ph"] == "X" and ev["name"] == "phase"
+    assert ev["args"]["shape"] == "(1, 2)"
+    assert doc["metadata"]["run"] == "unit"
+
+
+def test_simulator_emits_spans_when_tracing(specs):
+    enable_tracing()
+    run_batch(specs[:1], RATES, CFG)
+    names = [s.name for s in get_spans()]
+    assert "sim.stack" in names and "sim.dispatch" in names \
+        and "sim.wait" in names
+    disp = [s for s in get_spans() if s.name == "sim.dispatch"]
+    assert all("cold" in s.args for s in disp)
+
+
+def test_metrics_registry(tmp_path):
+    m = MetricsRegistry()
+    m.inc("a")
+    m.inc("a", 2)
+    assert m.get("a") == 3
+    m.observe("lat", 1.0)
+    m.observe("lat", 3.0)
+    snap = m.snapshot()
+    assert snap["a"] == 3
+    assert snap["lat"] == dict(count=2, sum=4.0, min=1.0, max=3.0)
+    assert "cache.runner.misses" in snap        # absorbed LRU counters
+    sink = str(tmp_path / "events.jsonl")
+    m.set_sink(sink)
+    m.event("chunk_failed", reason="boom", n=2)
+    m.event("other")
+    assert [e["reason"] for e in m.events("chunk_failed")] == ["boom"]
+    lines = [json.loads(x) for x in open(sink)]
+    assert len(lines) == 2 and lines[0]["event"] == "chunk_failed"
+    out = str(tmp_path / "log.jsonl")
+    assert m.save_jsonl(out) == 2
+    m.reset()
+    assert m.get("a") == 0 and not m.events()
+
+
+def test_cache_counters_monotonic():
+    before = cache_counters()
+    r = build_routing(T.build("mesh", 16))
+    run_batch([make_spec(r, TR.uniform(r.topo))],
+              np.array([0.1], np.float32), CFG)
+    after = cache_counters()
+    for k in ("cache.runner.misses", "cache.runner.hits",
+              "cache.routing.misses"):
+        assert after[k] >= before[k]
+
+
+# ---------------------------------------------------------------------
+# executor + engine plumbing
+# ---------------------------------------------------------------------
+
+def test_progress_callback_three_and_four_arg():
+    exp = X.Experiment([X.Scenario("mesh", 16, rates=X.SaturationGrid(3)),
+                        X.Scenario("folded_hexa_torus", 16,
+                                   rates=X.SaturationGrid(3))], cfg=CFG)
+    eng = SweepEngine(cfg=CFG)
+    legacy, rich = [], []
+    X.run(exp, engine=eng, chunk_size=1,
+          progress=lambda done, total, key: legacy.append((done, total)))
+    X.run(exp, engine=eng, chunk_size=1,
+          progress=lambda done, total, key, info:
+          rich.append((done, total, info)))
+    assert [x[:2] for x in legacy] == [x[:2] for x in rich]
+    for _, _, info in rich:
+        assert info["status"] == "ok" and info["scenarios"] == 1
+        assert info["elapsed_s"] >= 0 and info["compiled"] >= 0
+    # warm second run: the engine reused its executables
+    assert sum(info["compiled"] for _, _, info in rich) == 0
+
+
+class _FailingEngine(SweepEngine):
+    poison_n: int = 0
+
+    def run_specs(self, specs, rates, single_program=False):
+        if any(s.n == self.poison_n for s in specs):
+            raise RuntimeError("injected failure")
+        return super().run_specs(specs, rates, single_program)
+
+
+def test_failed_chunk_logs_metrics_event():
+    eng = _FailingEngine(cfg=CFG)
+    eng.poison_n = 36
+    exp = X.Experiment([X.Scenario("mesh", 16),
+                        X.Scenario("mesh", 36)], cfg=CFG,
+                       name="obs_fail_unit")
+    n0 = len(METRICS.events("execute.chunk_failed"))
+    infos = []
+    frame = X.run(exp, engine=eng, chunk_size=1, on_error="skip",
+                  progress=lambda d, t, k, info: infos.append(info))
+    assert [r["status"] for r in frame.rows] == ["ok", "failed"]
+    evs = METRICS.events("execute.chunk_failed")[n0:]
+    assert len(evs) == 1
+    assert evs[0]["experiment"] == "obs_fail_unit"
+    assert "injected failure" in evs[0]["reason"]
+    assert evs[0]["indices"] == [1]
+    assert [i["status"] for i in infos] == ["ok", "failed"]
+
+
+def test_engine_compile_stats_survive_evictions():
+    """Satellite regression: compile accounting is a monotonic
+    miss-delta, so an LRU eviction between groups cannot make the
+    engine report fewer (or negative) compiles."""
+    from repro.core import simulator as sim
+    tiny = SimConfig(cycles=80, warmup=20)
+    rates = np.array([0.1, 0.3], np.float32)
+    specs = []
+    for name, n in HETERO:
+        r = build_routing(T.build(name, n))
+        specs.append(make_spec(r, TR.uniform(r.topo)))
+    old_max = sim.runner_cache_info()["max_size"]
+    sim._RUNNER_CACHE.clear()
+    eng = SweepEngine(cfg=tiny, bucket=False)
+    try:
+        sim.set_runner_cache_limit(1)   # every group evicts the other
+        eng.run_specs(specs, rates)     # 2 shapes -> 2 compiles
+        assert eng.stats["compiles"] == 2
+        eng.run_specs(specs, rates)     # both cold again (evicted)
+        assert eng.stats["compiles"] == 4
+        assert eng.stats["reuses"] == 0
+    finally:
+        sim.set_runner_cache_limit(old_max)
+
+
+def test_engine_emits_sweep_group_spans(specs):
+    enable_tracing()
+    clear_trace()
+    SweepEngine(cfg=CFG).run_specs(specs, RATES)
+    groups = [s for s in get_spans() if s.name == "sweep.group"]
+    assert groups and all(s.args["kind"] == "static" for s in groups)
+
+
+def test_experiment_pipeline_emits_plan_execute_spans():
+    enable_tracing()
+    clear_trace()
+    exp = X.Experiment([X.Scenario("mesh", 16,
+                                   rates=X.ExplicitRates((0.1,)))],
+                       cfg=CFG)
+    X.run(exp, engine=SweepEngine(cfg=CFG))
+    names = [s.name for s in get_spans()]
+    for want in ("experiment.plan", "experiment.execute",
+                 "execute.chunk", "sweep.group", "sim.dispatch"):
+        assert want in names, want
