@@ -2,12 +2,17 @@
 # the targets work without `pip install -e .`.
 PY := PYTHONPATH=src python
 
-.PHONY: test bench bench-smoke bench-sim bench-workloads \
+.PHONY: test lint-analysis bench bench-smoke bench-sim bench-workloads \
         bench-experiments bench-faults bench-faults-full bench-synth \
         bench-synth-full bench-obs bench-obs-full examples
 
 test:                 ## tier-1 verify
 	$(PY) -m pytest -x -q
+
+lint-analysis:        ## static verification gate (DESIGN.md §14)
+	$(PY) -m repro.analysis --all-builtin -o results/diagnostics.json
+	@command -v ruff >/dev/null 2>&1 && ruff check src \
+		|| echo "ruff not installed; skipping style lint"
 
 bench:                ## all paper figures, analytic model
 	$(PY) -m benchmarks.run

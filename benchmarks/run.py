@@ -20,7 +20,21 @@ def main(argv=None) -> None:
     ap.add_argument("--sim", action="store_true",
                     help="cycle-accurate simulator instead of analytic")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--verify", action="store_true",
+                    help="certify every benchmarked topology deadlock-"
+                         "free (repro.analysis) before running figures")
     args = ap.parse_args(argv)
+
+    if args.verify:
+        # static preflight: a figure produced from an uncertified
+        # routing is not worth the simulation time it costs
+        from repro.analysis import analyze, builtin_names
+        rep = analyze(names=builtin_names())
+        print(f"# preflight: {rep.summary()}", file=sys.stderr)
+        if not rep.ok:
+            for d in rep.errors():
+                print(f"# {d}", file=sys.stderr)
+            sys.exit(1)
 
     from . import paper_benches as P
     sizes = P.SIZES_FULL if args.full else None

@@ -1,0 +1,46 @@
+"""Static verification layer (DESIGN.md §14).
+
+    from repro.analysis import analyze
+    rep = analyze(names=["folded_hexa_torus"], n=36, fault_kmax=2)
+    assert rep.ok
+    rep.to_json("results/diagnostics.json")
+
+    # CLI / CI gate:
+    #   python -m repro.analysis --all-builtin
+
+Three analyzer families behind one front door, all speaking structured
+`Diagnostic` records with stable codes (see `diagnostics.CODES`):
+
+  * `routing_verify` — exhaustive deadlock/reachability certification
+    of routing artifacts (RT codes; witness = the actual CDG cycle);
+  * `principles` — the paper's design principles as shared lint (DP
+    codes; the synth prefilter and planner skip logic are shims over
+    this module, with byte-identical legacy messages);
+  * `jaxpr_hazards` — static hazards of the batched JAX simulator (JX
+    codes: int32 overflow bounds, sacrificial-slot padding contract,
+    recompile storms, host syncs, dtype promotions).
+
+`jaxpr_hazards` (and the jax-touching parts of the engine) import jax
+lazily, so lint/certification work in jax-free contexts.
+"""
+from .diagnostics import (CODES, ERROR, INFO, WARNING, Diagnostic,
+                          Report, diag)
+from .engine import (DEFAULT_N, analyze, analyze_jax, analyze_topology,
+                     builtin_names)
+from .principles import (FeasibilityCriteria, check_n_constraint,
+                         diagnose, lint_topology, max_feasible_link_mm)
+from .routing_verify import (RoutingCertificate, certify_routing,
+                             check_acyclic, check_reachability,
+                             check_table_channels, dependency_edges,
+                             find_cdg_cycle, verify_routing)
+
+__all__ = [
+    "CODES", "ERROR", "WARNING", "INFO", "Diagnostic", "Report", "diag",
+    "analyze", "analyze_topology", "analyze_jax", "builtin_names",
+    "DEFAULT_N",
+    "FeasibilityCriteria", "diagnose", "lint_topology",
+    "check_n_constraint", "max_feasible_link_mm",
+    "RoutingCertificate", "certify_routing", "verify_routing",
+    "check_acyclic", "check_reachability", "check_table_channels",
+    "dependency_edges", "find_cdg_cycle",
+]

@@ -1,0 +1,359 @@
+"""Static JAX hazard analysis of the batched simulator (DESIGN.md §14).
+
+The batched step's correctness rests on contracts that bitwise tests
+probe but never *inspect*: int32 counters must not overflow at the
+configured cycle count, every scatter fed by padded lanes must land on
+a sacrificial slot (buffer slot B, channel row C), a sweep should not
+compile one executable per topology, and the traced program should
+contain no host callbacks or silent dtype promotions.  This module
+checks those contracts statically:
+
+  * **JX001 int32-overflow** — closed-form worst-case bounds for every
+    int32 accumulator in `SimState` given `SimConfig`; flagged when a
+    bound reaches 2^31.  The dominant term is the summed-latency
+    counter: each ejection contributes up to ``cycles`` and a node can
+    eject from all P+1 ports each measured cycle, so
+    ``lat_node <= measured * (P+1) * cycles`` — overflow near
+    ``cycles ~ 46341`` even at one ejection per cycle.
+  * **JX002 pad-slot-write** — the padding contract of
+    `sweep.padding.pad_spec`, checked by inspecting the actual stacked
+    `BatchSpec` leaves: padded table/out_ch/in_ch entries must be -1
+    (so pad lanes route nowhere and scatters are redirected to row C /
+    slot B), padded channel endpoints 0, depths >= 1, pad traffic rows
+    1.0 and pad injection weights 0.  Any violation means a scatter
+    index can reach a *live* slot of another spec.
+  * **JX003 recompile-hazard** — distinct padded shapes in one spec
+    collection; each distinct (shape, kmax) is a separate compiled
+    executable, so a heterogeneous sweep without bucketing compiles
+    once per topology (the ROADMAP's warm-path regression).
+  * **JX004 host-sync** / **JX005 dtype-promotion** — a recursive walk
+    of the traced jaxpr (`core.simulator.trace_batch`; abstract
+    evaluation only, nothing is compiled or run) looking for host
+    callback primitives inside the scan and for widening
+    `convert_element_type` ops or 64-bit avals.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .diagnostics import Diagnostic, Report, diag
+
+INT32_MAX = 2 ** 31
+
+
+# =====================================================================
+# JX001 — int32 counter overflow bounds
+# =====================================================================
+
+def counter_bounds(n: int, p: int, cfg, telemetry: bool | None = None
+                   ) -> dict[str, int]:
+    """Worst-case value of each int32 `SimState` accumulator.
+
+    n, p are the (padded) node count and max real port count; the
+    injection port makes the per-node port axis p+1 wide.  Bounds are
+    deliberately loose upper bounds — a flagged config *may* survive in
+    practice, an unflagged one provably cannot overflow.
+    """
+    meas = max(cfg.cycles - cfg.warmup, 0)
+    pi = p + 1
+    bounds = {
+        # one event per node per cycle
+        "delivered": meas * n,
+        "offered": meas * n,
+        "accepted": meas * n,
+        # each ejection's latency <= cycles; up to pi ejections per
+        # node per cycle
+        "lat_node": meas * pi * cfg.cycles,
+    }
+    if telemetry if telemetry is not None else getattr(
+            cfg, "telemetry", False):
+        v, b = cfg.n_vcs, cfg.buf_depth
+        bounds.update(
+            tel_busy=meas,                   # one traversal per channel
+            tel_stall=meas * pi * v,         # all lanes starve same ch
+            tel_occ=meas * b,                # occupancy <= buf depth
+            tel_inj=meas,
+            tel_eject=meas * pi,
+            tel_hist=meas * n * pi,          # all ejections in one bin
+        )
+    return bounds
+
+
+def check_overflow(n: int, p: int, cfg, target: str = "",
+                   report: Report | None = None) -> list[Diagnostic]:
+    """JX001 for every counter whose worst-case bound reaches 2^31."""
+    out = []
+    for name, bound in counter_bounds(n, p, cfg).items():
+        if bound >= INT32_MAX:
+            out.append(diag(
+                "JX001",
+                f"int32 counter '{name}' worst-case bound {bound:,} >= "
+                f"2^31 at cycles={cfg.cycles} (warmup={cfg.warmup}, "
+                f"N={n}, P={p}); simulated metrics could silently wrap",
+                target=target, counter=name, bound=int(bound),
+                cycles=int(cfg.cycles), warmup=int(cfg.warmup),
+                n=int(n), p=int(p)))
+    if report is not None:
+        report.record("overflow", target or f"n{n}/p{p}")
+        report.extend(out)
+    return out
+
+
+# =====================================================================
+# JX002 — sacrificial-slot padding contract
+# =====================================================================
+
+def check_padding_contract(batch, specs, target: str = "",
+                           report: Report | None = None
+                           ) -> list[Diagnostic]:
+    """JX002: inspect stacked `BatchSpec` leaves against `pad_spec`'s
+    contract, per spec.  `specs` supplies each row's real (n, p, c)."""
+    out: list[Diagnostic] = []
+    S = batch.table.shape[0]
+    N, P = batch.out_ch.shape[1], batch.out_ch.shape[2]
+    C = batch.ch_src.shape[1]
+
+    def bad(i, leaf, mask, expect):
+        arr = getattr(batch, leaf)[i]
+        viol = np.asarray(mask & ~expect)
+        if not viol.any():
+            return
+        idx = tuple(int(x) for x in np.argwhere(viol)[0])
+        out.append(diag(
+            "JX002",
+            f"spec {i} leaf '{leaf}' violates the sacrificial-slot "
+            f"padding contract at index {idx} (value "
+            f"{arr[idx].item()!r}, {int(viol.sum())} violation(s)); a "
+            f"scatter fed by this lane can touch a live slot",
+            target=target, spec=i, leaf=leaf, index=idx,
+            value=arr[idx].item(), n_bad=int(viol.sum())))
+
+    for i in range(min(S, len(specs))):
+        s = specs[i]
+        n, p, c = s.n, s.p, s.c
+        # pad masks per leaf
+        tbl = batch.table[i]
+        m = np.zeros(tbl.shape, bool)
+        m[n:] = True
+        m[:, n:] = True
+        m[:n, :n, p:P] = True           # injection col lives at slot P
+        bad(i, "table", m, tbl == -1)
+        for leaf in ("out_ch", "in_ch"):
+            a = getattr(batch, leaf)[i]
+            m = np.zeros(a.shape, bool)
+            m[n:] = True
+            m[:, p:] = True
+            bad(i, leaf, m, a == -1)
+            # live entries must index a real channel of THIS spec: a
+            # declared out_ch >= c would scatter into another spec's
+            # channel rows after padding
+            live = ~m & (a >= 0)
+            bad(i, leaf, live, a < c)
+        mc = np.zeros((C,), bool)
+        mc[c:] = True
+        for leaf, fill in (("ch_src", 0), ("ch_dst", 0),
+                           ("ch_in_port", 0), ("ch_out_port", 0)):
+            a = getattr(batch, leaf)[i]
+            bad(i, leaf, mc, a == fill)
+        bad(i, "ch_dst", ~mc, batch.ch_dst[i] < n)
+        bad(i, "ch_in_port", ~mc, batch.ch_in_port[i] < p)
+        bad(i, "ch_depth", mc, batch.ch_depth[i] == 1)
+        bad(i, "ch_depth", np.ones((C,), bool), batch.ch_depth[i] >= 1)
+        cum = batch.traffic_cum[i]
+        m = np.zeros(cum.shape, bool)
+        m[n:] = True
+        m[:, n:] = True
+        bad(i, "traffic_cum", m, cum == 1.0)
+        inj = batch.inj_weight[i]
+        m = np.zeros(inj.shape, bool)
+        m[n:] = True
+        bad(i, "inj_weight", m, inj == 0.0)
+    if report is not None:
+        report.record("padding", target or f"batch[{S}]")
+        report.extend(out)
+    return out
+
+
+# =====================================================================
+# JX003 — recompile hazards (distinct shapes per executable)
+# =====================================================================
+
+def check_recompiles(shapes, target: str = "", bucketed=None,
+                     report: Report | None = None) -> list[Diagnostic]:
+    """JX003 when a spec collection spans several padded shapes.
+
+    `shapes`: one `PadShape` per spec.  Each distinct shape compiles a
+    separate executable; pass `bucketed` (the shapes after
+    `SweepEngine.bucket_shape`) to show how many compiles bucketing
+    would save.
+    """
+    distinct = sorted(set(shapes))
+    out: list[Diagnostic] = []
+    if len(distinct) > 1:
+        n_b = len(set(bucketed)) if bucketed is not None else None
+        msg = (f"{len(list(shapes))} spec(s) span {len(distinct)} "
+               f"distinct padded shapes -> {len(distinct)} compiled "
+               f"executables")
+        if n_b is not None and n_b < len(distinct):
+            msg += f"; shape bucketing would reduce this to {n_b}"
+        out.append(diag(
+            "JX003", msg, target=target,
+            n_shapes=len(distinct),
+            shapes=[tuple(dataclass_astuple(s)) for s in distinct],
+            n_bucketed=n_b))
+    if report is not None:
+        report.record("recompile", target or f"{len(list(shapes))} specs")
+        report.extend(out)
+    return out
+
+
+def dataclass_astuple(shape) -> tuple:
+    return (shape.n, shape.p, shape.c, shape.d)
+
+
+# =====================================================================
+# JX004 / JX005 — jaxpr walking
+# =====================================================================
+
+_HOST_SYNC_PRIMS = {
+    "pure_callback", "io_callback", "debug_callback", "debug_print",
+    "host_callback_call", "outside_call", "infeed", "outfeed",
+}
+
+
+def iter_eqns(jaxpr):
+    """Depth-first walk over all equations, descending into call/scan/
+    cond/pjit sub-jaxprs (accepts a ClosedJaxpr or a Jaxpr)."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                yield from iter_eqns(sub)
+
+
+def _sub_jaxprs(v):
+    if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _sub_jaxprs(x)
+
+
+def iter_avals(jaxpr):
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for v in list(jaxpr.invars) + list(jaxpr.outvars):
+        if hasattr(v, "aval"):
+            yield v.aval
+    for eqn in iter_eqns(jaxpr):
+        for v in list(eqn.invars) + list(eqn.outvars):
+            if hasattr(v, "aval"):
+                yield v.aval
+
+
+def check_host_sync(jaxpr, target: str = "",
+                    report: Report | None = None) -> list[Diagnostic]:
+    """JX004: host callback primitives anywhere in the traced step."""
+    hits: dict[str, int] = {}
+    for eqn in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name in _HOST_SYNC_PRIMS:
+            hits[name] = hits.get(name, 0) + 1
+    out = [diag(
+        "JX004",
+        f"traced step contains host callback primitive '{name}' "
+        f"(x{count}) — a device sync point inside the scan",
+        target=target, primitive=name, count=count)
+        for name, count in sorted(hits.items())]
+    if report is not None:
+        report.record("host-sync", target or "jaxpr")
+        report.extend(out)
+    return out
+
+
+def _width(dtype) -> int:
+    return np.dtype(dtype).itemsize
+
+
+def check_dtype_promotions(jaxpr, target: str = "",
+                           report: Report | None = None
+                           ) -> list[Diagnostic]:
+    """JX005: widening convert_element_type ops and 64-bit avals.
+
+    Intentional int32<->float32 casts (`astype` in the step) keep the
+    item width; a *widening* convert or any f64/i64 aval means x64
+    leaked in or a Python scalar promoted an array — both double
+    memory traffic silently.
+    """
+    out: list[Diagnostic] = []
+    widenings: dict[tuple, int] = {}
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        new = eqn.params.get("new_dtype")
+        src = getattr(getattr(eqn.invars[0], "aval", None), "dtype", None)
+        if src is None or new is None:
+            continue
+        # narrow->32-bit widenings (int16 table -> int32 index) are the
+        # deliberate storage/compute split; promotion TO 64-bit is the
+        # silent hazard
+        if _width(new) > _width(src) and _width(new) >= 8:
+            key = (str(np.dtype(src)), str(np.dtype(new)))
+            widenings[key] = widenings.get(key, 0) + 1
+    for (src, new), count in sorted(widenings.items()):
+        out.append(diag(
+            "JX005",
+            f"traced step widens {src} -> {new} (x{count}) — silent "
+            f"dtype promotion",
+            target=target, src=src, dst=new, count=count))
+    wide = {}
+    for aval in iter_avals(jaxpr):
+        dt = getattr(aval, "dtype", None)
+        if dt is not None and np.dtype(dt).itemsize >= 8 and \
+                np.dtype(dt).kind in "fiuc":
+            wide[str(np.dtype(dt))] = wide.get(str(np.dtype(dt)), 0) + 1
+    for dt, count in sorted(wide.items()):
+        out.append(diag(
+            "JX005",
+            f"traced step carries {count} {dt} intermediate(s) — 64-bit "
+            f"mode leaked into the batched path",
+            target=target, dtype=dt, count=count))
+    if report is not None:
+        report.record("dtype", target or "jaxpr")
+        report.extend(out)
+    return out
+
+
+# =====================================================================
+# front door
+# =====================================================================
+
+def analyze_batch(specs, rates, cfg=None, *, schedules=None,
+                  target: str = "", report: Report | None = None,
+                  trace: bool = True) -> Report:
+    """Run all JX checks on one batch of SimSpecs.
+
+    Traces the real runner abstractly (`simulator.trace_batch`) for the
+    jaxpr-level checks (skippable with trace=False — tracing a large
+    config costs a few seconds), and inspects the padded arrays and
+    counter bounds directly.
+    """
+    from repro.core import simulator as sim
+    from repro.sweep.padding import PadShape, stack_specs
+
+    cfg = cfg or sim.SimConfig()
+    report = report if report is not None else Report()
+    shapes = [PadShape(n=s.n, p=s.p, c=s.c, d=s.d) for s in specs]
+    batch, shape = stack_specs(specs)
+    # dispatched one-batch-at-a-time these specs would compile one
+    # executable per distinct shape; stacking pads them to `shape`
+    check_recompiles(shapes, target=target,
+                     bucketed=[shape] * len(shapes), report=report)
+    check_overflow(shape.n, shape.p, cfg, target=target, report=report)
+    check_padding_contract(batch, specs, target=target, report=report)
+    if trace:
+        jaxpr, _, _ = sim.trace_batch(specs, rates, cfg,
+                                      schedules=schedules)
+        check_host_sync(jaxpr, target=target, report=report)
+        check_dtype_promotions(jaxpr, target=target, report=report)
+    return report

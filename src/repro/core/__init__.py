@@ -4,7 +4,7 @@ and the topology-aware collective model that plugs into the training
 framework's roofline analyzer)."""
 from .topology import Topology, build, GENERATORS, N_CONSTRAINTS, \
     make_topology, register_topology, unregister_topology, \
-    validate_edges  # noqa
+    validate_edges, valid_n, nearest_valid_n  # noqa
 from .routing import Routing, build_routing, dependency_graph_is_acyclic, \
     routing_for, routing_cache_info, routing_cache_clear  # noqa
 from .simulator import SimConfig, simulate, saturation_throughput, \

@@ -58,6 +58,11 @@ class Routing:
 
     EJECT: int = -2
 
+    #: verification certificate (`analysis.routing_verify
+    #: .RoutingCertificate`), attached by `routing_for(certify=True)`
+    #: and cached with the routing; None until certified.
+    cert: object = None
+
     @property
     def n_channels(self) -> int:
         return len(self.ch_src)
@@ -313,13 +318,19 @@ _ROUTING_CACHE_MAX = int(os.environ.get("REPRO_ROUTING_CACHE_MAX", "4096"))
 _ROUTING_CACHE_STATS = dict(hits=0, misses=0, evictions=0)
 
 
-def routing_for(topo: Topology) -> Routing:
+def routing_for(topo: Topology, certify: bool = False) -> Routing:
     """Build-and-cache the deadlock-free routing for a topology.
 
     Routing construction (Dijkstra over the dual graph) dominates
     analytic evaluation time; benchmarks, the experiment planner and
     the synthesis engine share this cache so a structure is only ever
     routed once per process — regardless of what it is named.
+
+    certify=True additionally runs the exhaustive static verifier
+    (`repro.analysis.routing_verify`) and attaches the resulting
+    `RoutingCertificate` as `r.cert`.  The certificate lives with the
+    cached routing, so a structure is certified at most once per
+    process; it raises nothing — inspect `r.cert.ok` / diagnostics.
     """
     key = (topo.structural_hash(), topo.substrate,
            float(topo.chiplet_area_mm2))
@@ -327,16 +338,27 @@ def routing_for(topo: Topology) -> Routing:
     if hit is not None:
         _ROUTING_CACHE[key] = hit          # LRU: move to the back
         _ROUTING_CACHE_STATS["hits"] += 1
+        if certify and hit.cert is None:
+            hit.cert = _certify(hit)
         return hit
     _ROUTING_CACHE_STATS["misses"] += 1
     with _span("routing.build", cat="routing", topology=topo.name,
                n=topo.n, substrate=topo.substrate):
         r = build_routing(topo)
+    if certify:
+        r.cert = _certify(r)
     _ROUTING_CACHE[key] = r
     while len(_ROUTING_CACHE) > _ROUTING_CACHE_MAX:
         _ROUTING_CACHE.pop(next(iter(_ROUTING_CACHE)))
         _ROUTING_CACHE_STATS["evictions"] += 1
     return r
+
+
+def _certify(r: Routing):
+    from repro.analysis.routing_verify import certify_routing
+    with _span("routing.certify", cat="routing", topology=r.topo.name,
+               n=r.topo.n, substrate=r.topo.substrate):
+        return certify_routing(r)
 
 
 def routing_cache_info() -> dict:
@@ -385,17 +407,21 @@ def _CUSTOM():
 
 
 def dependency_graph_is_acyclic(r: Routing) -> bool:
-    """Check the *used* channel-dependency graph is a DAG (deadlock-free)."""
-    import networkx as nx
-    g = nx.DiGraph()
-    n, P = r.topo.n, r.max_ports
-    # add an edge c1 -> c2 whenever the table can chain them
-    for d in range(n):
-        for c1 in range(r.n_channels):
-            v = r.ch_dst[c1]
-            p = r.table[d, v, r.ch_in_port[c1]]
-            if p >= 0:
-                c2 = r.out_ch[v, p]
-                if c2 >= 0:
-                    g.add_edge(c1, c2)
-    return nx.is_directed_acyclic_graph(g)
+    """Deprecated: use `repro.analysis.routing_verify` instead.
+
+    This predicate answers yes/no with no witness; the verifier's
+    `check_acyclic` returns the actual channel-dependency cycle (as an
+    RT001 diagnostic) and `certify_routing` bundles it with the
+    reachability and table-well-formedness checks.  Kept as a shim over
+    the same vectorized dependency-edge extraction so existing callers
+    keep working."""
+    import warnings
+
+    from repro.analysis.routing_verify import (dependency_edges,
+                                               find_cdg_cycle)
+    warnings.warn(
+        "dependency_graph_is_acyclic is deprecated; use "
+        "repro.analysis.routing_verify.certify_routing (or "
+        "routing_for(topo, certify=True)) for a witness-producing "
+        "certificate", DeprecationWarning, stacklevel=2)
+    return not find_cdg_cycle(dependency_edges(r), r.n_channels)

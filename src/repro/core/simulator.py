@@ -806,6 +806,38 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
     return out
 
 
+def trace_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
+                pad_shape=None, schedules=None, k_pad=None):
+    """Abstractly trace the batched runner without compiling or running.
+
+    Builds exactly the arguments `run_batch` would dispatch (same
+    padding, same runner construction) but hands them to
+    `jax.make_jaxpr` instead of the jitted callable — tracing evaluates
+    the step symbolically on avals, so it is cheap even for cycle
+    counts that would take minutes to simulate.  Returns
+    `(closed_jaxpr, pad_shape, batch)`; the static analyzer
+    (`repro.analysis.jaxpr_hazards`) walks the jaxpr for host
+    callbacks and dtype promotions and inspects `batch` against the
+    sacrificial-slot padding contract.
+    """
+    from repro.sweep.padding import stack_schedules, stack_specs
+    batch, shape = stack_specs(specs, pad_shape)
+    s = len(specs)
+    rates = np.asarray(rates, np.float32)
+    if rates.ndim == 1:
+        rates = np.broadcast_to(rates, (s, rates.shape[0]))
+    if schedules is None:
+        fn = _make_batch_runner(shape.n, shape.p, shape.c, shape.d, cfg,
+                                resolve_alloc(cfg.alloc))
+        args = (batch, jnp.asarray(rates))
+    else:
+        sbatch, kmax = stack_schedules(schedules, shape.n, k_pad)
+        fn = _make_batch_runner(shape.n, shape.p, shape.c, shape.d, cfg,
+                                resolve_alloc(cfg.alloc), kmax)
+        args = (batch, jnp.asarray(rates), sbatch)
+    return jax.make_jaxpr(fn)(*args), shape, batch
+
+
 # =====================================================================
 # single-spec conveniences (thin wrappers over the batched path)
 # =====================================================================

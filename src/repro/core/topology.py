@@ -630,6 +630,30 @@ N_CONSTRAINTS = {
     "cluscross_v2": lambda n: all(d % 2 == 0 for d in pl.grid_dims(n)),
 }
 
+def valid_n(name: str, n: int) -> bool:
+    """Does `name`'s generator accept this chiplet count?  (True for
+    names without an entry in `N_CONSTRAINTS` — including custom
+    generators, which validate at build time.)"""
+    rule = N_CONSTRAINTS.get(name)
+    return rule is None or bool(rule(n))
+
+
+def nearest_valid_n(name: str, n: int) -> int:
+    """Largest supported N' <= n for a constrained generator (falls
+    back to the smallest supported N' > n when nothing below fits).
+    Used by sweep CLIs so `--all-builtin -n 36` can still exercise
+    e.g. the hypercube at 32 instead of skipping it."""
+    if valid_n(name, n):
+        return n
+    for cand in range(n - 1, 1, -1):
+        if valid_n(name, cand):
+            return cand
+    for cand in range(n + 1, 4 * n + 2):
+        if valid_n(name, cand):
+            return cand
+    raise ValueError(f"{name}: no supported N near {n}")
+
+
 #: user/synth-registered generators, consulted by `build` after the
 #: built-in table.  A custom generator is `gen(n, **kw)` returning either
 #: a `(name, pos, edges)` triple (the built-in convention) or a full
@@ -667,7 +691,7 @@ def build(name: str, n: int, substrate: str = "organic",
           roles_scheme: str = "homogeneous", hex_region: bool = False,
           ) -> Topology:
     if name in GENERATORS:
-        if name in N_CONSTRAINTS and not N_CONSTRAINTS[name](n):
+        if not valid_n(name, n):
             raise ValueError(f"{name} does not support N={n}")
         kw = {"hex_region": hex_region} if name in (
             "hexamesh", "folded_hexa_torus") else {}

@@ -108,7 +108,8 @@ def execute(pl: Plan, engine: SweepEngine | None = None,
     rows: list = [None] * n
     errors: list = []
     for i, reason in pl.skipped:
-        rows[i] = _identity_row(exp, exp.scenarios[i], "invalid", reason)
+        rows[i] = _identity_row(exp, exp.scenarios[i], "invalid", reason,
+                                diag_code=pl.skip_codes.get(i, ""))
     total, done = pl.n_planned, 0
     arity = _progress_arity(progress) if progress is not None else 0
     with trace("experiment.execute", cat="experiments",
@@ -142,7 +143,8 @@ def execute(pl: Plan, engine: SweepEngine | None = None,
                             planned[ps.index] = ps
                             errors.append((ps.index, msg))
                             rows[ps.index] = _identity_row(
-                                exp, ps.scenario, "failed", msg)
+                                exp, ps.scenario, "failed", msg,
+                                diag_code="EX001")
                         out = None
                 if out is not None:
                     for ps, res in zip(chunk, out):

@@ -33,12 +33,12 @@ COLUMNS = (
     "analytic_saturation", "sim_saturation", "rel_throughput",
     "abs_throughput_gbps", "latency_ns", "avg_hops", "chiplet_area_mm2",
     "phy_area_frac", "power_w", "max_link_mm", "radix",
-    "link_util_p95", "link_util_max", "link_gini", "error",
+    "link_util_p95", "link_util_max", "link_gini", "error", "diag_code",
 )
 
 
 def _identity_row(exp: Experiment, s: Scenario, status: str,
-                  error: str = "") -> dict:
+                  error: str = "", diag_code: str = "") -> dict:
     row = dict.fromkeys(COLUMNS)
     fs = s.faults if s.degraded else None
     row.update(experiment=exp.name, backend=exp.backend, status=status,
@@ -48,7 +48,8 @@ def _identity_row(exp: Experiment, s: Scenario, status: str,
                kind=s.kind, rates=s.rates.describe(),
                faults=s.fault_name,
                failed_links=fs.n_links if fs else 0,
-               failed_chiplets=fs.n_chiplets if fs else 0, error=error)
+               failed_chiplets=fs.n_chiplets if fs else 0, error=error,
+               diag_code=diag_code)
     row.update(dict(s.tags))
     return row
 

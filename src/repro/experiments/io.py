@@ -28,7 +28,11 @@ import numpy as np
 #: link_util_p95 / link_util_max / link_gini, and per-link heatmap
 #: artifacts (obs.flight.LINK_COLUMNS, obs.report.SUMMARY_COLUMNS)
 #: share this stamp
-SCHEMA_VERSION = 3
+#: v4: static-analysis diagnostics (DESIGN.md §14) — tidy rows gain a
+#: machine-readable `diag_code` column (DP006/FT001 skips, EX001 failed
+#: chunks), synth rows carry rejection codes, and `Report.to_json`
+#: diagnostics artifacts share this stamp
+SCHEMA_VERSION = 4
 
 
 def stable_columns(rows: Sequence[dict],

@@ -73,6 +73,11 @@ class Plan:
     buckets: list
     skipped: list               # [(scenario index, reason)]
     single_program: bool = False
+    #: scenario index -> diagnostic code for each skip (DESIGN.md §14);
+    #: `skipped` keeps its legacy (index, reason) shape, the code rides
+    #: here so `ResultFrame` invalid rows carry a machine-readable
+    #: `diag_code` alongside the byte-identical reason string
+    skip_codes: dict = dataclasses.field(default_factory=dict)
 
     @property
     def n_planned(self) -> int:
@@ -208,6 +213,7 @@ def plan(experiment: Experiment, engine: SweepEngine | None = None,
     sim_backend = experiment.backend == "sim"
     buckets: dict[BucketKey, Bucket] = {}
     skipped: list = []
+    skip_codes: dict = {}
     with trace("experiment.plan", cat="experiments",
                experiment=experiment.name,
                scenarios=len(experiment.scenarios)):
@@ -215,6 +221,7 @@ def plan(experiment: Experiment, engine: SweepEngine | None = None,
             if not s.valid:
                 skipped.append((i, f"{s.topology_name} does not support "
                                    f"N={s.n} (topology.N_CONSTRAINTS)"))
+                skip_codes[i] = "DP006"
                 continue
             try:
                 topo, routing = resolve_topology(s)
@@ -223,6 +230,7 @@ def plan(experiment: Experiment, engine: SweepEngine | None = None,
                 # names a non-existent link, ...): skip with the
                 # sampler-actionable reason rather than aborting the grid
                 skipped.append((i, f"fault set rejected: {e}"))
+                skip_codes[i] = "FT001"
                 continue
             tm, schedule = _resolve_traffic(s, topo, meas)
             analytic = routing.saturation_rate(tm)
@@ -266,4 +274,4 @@ def plan(experiment: Experiment, engine: SweepEngine | None = None,
                 m.items += b.items
         out = list(merged.values())
     return Plan(experiment=experiment, buckets=out, skipped=skipped,
-                single_program=single_program)
+                single_program=single_program, skip_codes=skip_codes)

@@ -196,9 +196,8 @@ class Scenario:
 
     @property
     def valid(self) -> bool:
-        return not (isinstance(self.topology, str)
-                    and self.topology in T.N_CONSTRAINTS
-                    and not T.N_CONSTRAINTS[self.topology](self.n))
+        return not isinstance(self.topology, str) \
+            or T.valid_n(self.topology, self.n)
 
     @property
     def degraded(self) -> bool:

@@ -17,6 +17,7 @@ chiplets raise `DisconnectedFaultError` — degraded topologies are just
 more custom topologies, but a partitioned package is an outage, not a
 scenario.
 """
+from .enumerate import apply_variant, iter_fault_variants
 from .faultset import (DisconnectedFaultError, FaultError, FaultSet,
                        check_survivors_connected, surviving_connected)
 from .samplers import (SAMPLERS, adversarial_link_faults,
@@ -28,5 +29,5 @@ __all__ = [
     "check_survivors_connected", "surviving_connected",
     "sample_faults", "SAMPLERS", "random_link_faults",
     "correlated_link_faults", "adversarial_link_faults",
-    "random_chiplet_faults",
+    "random_chiplet_faults", "iter_fault_variants", "apply_variant",
 ]

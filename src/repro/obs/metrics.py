@@ -105,6 +105,13 @@ class MetricsRegistry:
         out.update(cache_counters())
         return out
 
+    def with_prefix(self, prefix: str) -> dict:
+        """Counter/observation snapshot filtered to one namespace
+        (e.g. "analysis." for the static-verifier counters) — cheap to
+        assert on in tests without wading through cache counters."""
+        return {k: v for k, v in self.snapshot().items()
+                if k.startswith(prefix)}
+
     def reset(self) -> None:
         with self._lock:
             self._counters.clear()

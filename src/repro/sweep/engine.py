@@ -56,8 +56,7 @@ class SweepCase(NamedTuple):
 
     @property
     def valid(self) -> bool:
-        return not (self.name in T.N_CONSTRAINTS
-                    and not T.N_CONSTRAINTS[self.name](self.n))
+        return T.valid_n(self.name, self.n)
 
 
 def _round_up(x: int, m: int) -> int:

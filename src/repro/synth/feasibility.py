@@ -1,88 +1,49 @@
 """Feasibility filter (DESIGN.md §11): the paper's design principles
 as candidate checks, applied before any routing or simulation.
 
-The paper distils FoldedHexaTorus from three principles.  Principle 1
-(low diameter) is an *objective* — the Pareto front rewards it via
-zero-load latency — but Principles 2 and 3 are *constraints* a
-substrate either meets or does not, so they prune the design space:
+The canonical implementation moved to `repro.analysis.principles`
+(DESIGN.md §14) so the synth prefilter, the experiment planner and the
+`python -m repro.analysis` CLI all emit the *same* diagnostic codes
+(DP001–DP005) instead of three divergent string sets.  This module is
+a compatibility shim: `FeasibilityCriteria` is the same class, and
+`check` returns exactly the legacy reason strings — they are the
+`message` fields of the structured diagnostics, in the same order, so
+the synth rejection ledger is byte-identical to pre-refactor runs.
 
-  * **Principle 2 — link-range budget**: every link spans at most
-    `max_link_range` intermediate chiplets (the paper argues range > 1
-    both slows the link and congests the wiring layers);
-  * **substrate rate floor**: the longest link must retain at least
-    `min_rate_fraction` of the maximum per-wire rate on this
-    substrate's Fig.-2 curve (`linkmodel.rate_fraction`) — the
-    mechanism that zeroes Torus/ClusCross-style wrap links at scale;
-  * **Principle 3 — wire budget**: the radix must leave a positive
-    per-link data-wire budget after the UCIe overhead
-    (`costmodel.data_wires`), optionally capped (`max_radix`), and the
-    total substrate wire cost may be bounded (`max_wire_cost_mm`).
+  * **Principle 2 — link-range budget** (DP001): every link spans at
+    most `max_link_range` intermediate chiplets;
+  * **substrate rate floor** (DP002): the longest link must retain at
+    least `min_rate_fraction` of the maximum per-wire rate on this
+    substrate's Fig.-2 curve — the mechanism that zeroes
+    Torus/ClusCross-style wrap links at scale;
+  * **Principle 3 — wire budget** (DP003/DP004/DP005): the radix must
+    leave a positive per-link data-wire budget after the UCIe overhead,
+    optionally capped (`max_radix`), and the total substrate wire cost
+    may be bounded (`max_wire_cost_mm`).
 
 Connectivity / well-formedness is not re-checked here — `make_topology`
 and `topology.build` already enforce it at construction time.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-
-import numpy as np
-
-from repro.core import costmodel as cm
-from repro.core import linkmodel as lm
+from repro.analysis.principles import (FeasibilityCriteria, diagnose,
+                                       max_feasible_link_mm)
 from repro.core.topology import Topology
 
-
-@dataclasses.dataclass(frozen=True)
-class FeasibilityCriteria:
-    max_link_range: int = 1          # Principle 2
-    min_rate_fraction: float = 0.25  # substrate floor on the Fig.-2 curve
-    max_radix: int | None = 8        # Principle 3: per-chiplet PHY budget
-    min_data_wires: int = 1          # Principle 3: wires left per link
-    max_wire_cost_mm: float | None = None
-
-    def max_link_mm(self, substrate: str) -> float:
-        return max_feasible_link_mm(substrate, self.min_rate_fraction)
-
-
-@functools.lru_cache(maxsize=64)
-def max_feasible_link_mm(substrate: str,
-                         min_rate_fraction: float) -> float:
-    """Longest link (mm) that still meets the rate floor on this
-    substrate — the inverse of the monotone tail of the Fig.-2 curve,
-    read off a fine grid (cached: `check` calls this once per
-    generated candidate)."""
-    grid = np.linspace(0.0, lm.MAX_LINK_LENGTH_MM, 7001)
-    ok = grid[lm.rate_fraction(grid, substrate) >= min_rate_fraction]
-    return float(ok.max()) if len(ok) else 0.0
+__all__ = ["FeasibilityCriteria", "max_feasible_link_mm", "check",
+           "check_diagnostics", "filter_feasible"]
 
 
 def check(topo: Topology,
           crit: FeasibilityCriteria = FeasibilityCriteria()) -> list[str]:
     """Reasons this candidate is infeasible; empty list == feasible."""
-    reasons = []
-    ranges = topo.link_ranges()
-    if len(ranges) and int(ranges.max()) > crit.max_link_range:
-        reasons.append(f"link-range {int(ranges.max())} > "
-                       f"{crit.max_link_range} (Principle 2)")
-    cap = crit.max_link_mm(topo.substrate)
-    lmax = topo.max_link_length_mm()
-    if lmax > cap + 1e-9:
-        reasons.append(f"max link {lmax:.1f} mm > {cap:.1f} mm "
-                       f"({topo.substrate} rate floor "
-                       f"{crit.min_rate_fraction:g})")
-    if crit.max_radix is not None and topo.radix > crit.max_radix:
-        reasons.append(f"radix {topo.radix} > {crit.max_radix} "
-                       "(Principle 3)")
-    if cm.data_wires(topo) < crit.min_data_wires:
-        reasons.append(f"data wires {cm.data_wires(topo)} < "
-                       f"{crit.min_data_wires} at radix {topo.radix} "
-                       "(Principle 3)")
-    if crit.max_wire_cost_mm is not None and \
-            cm.wire_cost_mm(topo) > crit.max_wire_cost_mm:
-        reasons.append(f"wire cost {cm.wire_cost_mm(topo):.0f} wire-mm "
-                       f"> {crit.max_wire_cost_mm:.0f}")
-    return reasons
+    return [d.message for d in diagnose(topo, crit)]
+
+
+def check_diagnostics(topo: Topology,
+                      crit: FeasibilityCriteria = FeasibilityCriteria()):
+    """The same checks as structured diagnostics (DP codes + witness)."""
+    return diagnose(topo, crit)
 
 
 def filter_feasible(topos, crit: FeasibilityCriteria = FeasibilityCriteria()

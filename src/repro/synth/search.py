@@ -32,7 +32,7 @@ from repro.obs.trace import trace
 
 from .evaluate import (Candidate, MAXIMIZE, evaluate_analytic,
                        objective_matrix, simulate_candidates)
-from .feasibility import FeasibilityCriteria, check
+from .feasibility import FeasibilityCriteria, check_diagnostics
 from .pareto import pareto_mask
 from .space import fold_mask_variants, key_seeds, perturb, random_geometric
 
@@ -107,11 +107,16 @@ class SearchState:
             self.stats["n_duplicate"] += 1
             return False
         self.seen.add(h)
-        reasons = check(topo, self.config.criteria)
-        if reasons:
+        diags = check_diagnostics(topo, self.config.criteria)
+        if diags:
             self.stats["n_infeasible"] += 1
-            self.rejected.append(dict(name=topo.name, origin=origin,
-                                      reasons=reasons))
+            # reason strings stay byte-identical to the legacy ledger
+            # (d.message IS the legacy string); codes ride alongside so
+            # rejections are machine-groupable (DESIGN.md §14)
+            self.rejected.append(dict(
+                name=topo.name, origin=origin,
+                reasons=[d.message for d in diags],
+                diag_codes=[d.code for d in diags]))
             return False
         self.stats["n_feasible"] += 1
         self.pool.append(Candidate(topo=topo, origin=origin, parent=parent))
@@ -195,7 +200,8 @@ class SearchResult:
                             n=self.state.config.n,
                             substrate=self.state.config.substrate,
                             status="infeasible",
-                            error="; ".join(r["reasons"])))
+                            error="; ".join(r["reasons"]),
+                            diag_code=";".join(r.get("diag_codes", []))))
         return out
 
 
@@ -206,7 +212,7 @@ class SearchResult:
 def _seed_pool(state: SearchState) -> None:
     cfg = state.config
     for name in cfg.anchors:
-        if name in T.N_CONSTRAINTS and not T.N_CONSTRAINTS[name](cfg.n):
+        if not T.valid_n(name, cfg.n):
             continue
         topo = T.build(name, cfg.n, substrate=cfg.substrate,
                        chiplet_area_mm2=cfg.area)
