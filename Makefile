@@ -4,7 +4,8 @@ PY := PYTHONPATH=src python
 
 .PHONY: test lint-analysis bench bench-smoke bench-sim bench-workloads \
         bench-experiments bench-faults bench-faults-full bench-synth \
-        bench-synth-full bench-obs bench-obs-full examples
+        bench-synth-full bench-obs bench-obs-full bench-adaptive \
+        bench-adaptive-full examples
 
 test:                 ## tier-1 verify
 	$(PY) -m pytest -x -q
@@ -47,9 +48,16 @@ bench-obs:            ## observability smoke: link heatmap + phase trace, < 60 s
 bench-obs-full:       ## full link-load heatmap grid (Table III, N=36)
 	$(PY) -m benchmarks.obs_bench
 
+bench-adaptive:       ## static-vs-adaptive routing smoke, < 60 s, CSV for CI
+	$(PY) -m benchmarks.adaptive_bench --smoke   # -> results/adaptive_gain.csv
+
+bench-adaptive-full:  ## full static-vs-adaptive gain grid (Table III, N=36)
+	$(PY) -m benchmarks.adaptive_bench
+
 examples:             ## quickstart examples (experiment-API smoke)
 	$(PY) examples/quickstart.py
 	$(PY) examples/workload_quickstart.py
 	$(PY) examples/synth_quickstart.py
 	$(PY) examples/fault_quickstart.py
 	$(PY) examples/obs_quickstart.py
+	$(PY) examples/adaptive_quickstart.py

@@ -47,6 +47,9 @@ CODES: dict[str, tuple[str, str, str]] = {
               "channel"),
     "RT004": ("routing-loop", ERROR,
               "table following exceeded the hop bound (livelock)"),
+    "RT005": ("escape-unsafe", ERROR,
+              "an adaptive routing choice loses its deadlock-free "
+              "escape path"),
     # ---- design principles (repro.analysis.principles) ---------------
     "DP001": ("link-range", WARNING,
               "link range exceeds the Principle-2 budget"),

@@ -168,6 +168,15 @@ def check_padding_contract(batch, specs, target: str = "",
         m = np.zeros(inj.shape, bool)
         m[n:] = True
         bad(i, "inj_weight", m, inj == 0.0)
+        # productive-ports mask (DESIGN.md §15): the pad region must be
+        # all-False so an adaptive selection can never name a padded
+        # destination, node or port
+        pr = batch.prod[i]
+        m = np.zeros(pr.shape, bool)
+        m[n:] = True
+        m[:, n:] = True
+        m[:, :, p:] = True
+        bad(i, "prod", m, ~pr)
     if report is not None:
         report.record("padding", target or f"batch[{S}]")
         report.extend(out)

@@ -21,8 +21,17 @@ witness for every violation:
   * **RT003 undeclared-channel** — every non-negative table entry must
     name an output port that carries a declared channel (`out_ch >= 0`
     and within the node's real port count).
+  * **RT005 escape-unsafe** — Duato escape condition for the
+    minimal-adaptive mode (DESIGN.md §15): every adaptive choice in the
+    productive-ports mask must (a) be strictly minimal, (b) name a
+    declared channel, and (c) leave the flit in a state — (next node,
+    arrival in-port) — from which the escape table (VC 0, the static
+    up*/down* table) still delivers to the destination; and the CDG
+    restricted to the escape class must stay acyclic.  Witnesses are
+    the concrete (dst, node, port) choice that breaks, or the escape-
+    class cycle.
 
-`certify_routing` bundles the three checks into a `RoutingCertificate`
+`certify_routing` bundles the checks into a `RoutingCertificate`
 that `routing.routing_for(topo, certify=True)` caches alongside the
 routing, so a structure is certified at most once per process.
 """
@@ -48,11 +57,14 @@ class RoutingCertificate:
     n_dep_edges: int            # used channel-dependency edges
     n_pairs_checked: int
     max_hops_seen: int
+    escape_safe: bool = True    # RT005: adaptive choices keep an escape
+    n_adaptive_choices: int = 0  # productive-ports entries verified
     diagnostics: tuple = ()     # the violations (empty == certified)
 
     @property
     def ok(self) -> bool:
-        return self.acyclic and self.complete and self.declared
+        return self.acyclic and self.complete and self.declared \
+            and self.escape_safe
 
 
 def _target(r) -> str:
@@ -255,11 +267,141 @@ def check_reachability(r, max_hops: int | None = None
     return out, n_pairs, int(hops.max()) if n_pairs else 0
 
 
+def check_escape(r, max_hops: int | None = None
+                 ) -> tuple[list[Diagnostic], int]:
+    """RT005: Duato escape condition for minimal-adaptive routing.
+
+    Verifies, exhaustively over every entry of the productive-ports
+    mask (`routing.productive_ports`, DESIGN.md §15):
+
+      * **minimality** — the port's downstream node is strictly one hop
+        closer to the destination (the adaptive class never lengthens a
+        path, so hop-count livelock is impossible);
+      * **declared channel** — the port carries a real channel;
+      * **escape deliverability** — from the post-hop state (next node
+        w, arrival in-port q), following the *escape* table (the static
+        up*/down* class, VC 0) delivers to the destination within the
+        hop bound.  This is the in-port-indexed state the simulator's
+        escape fallback actually consults, so certifying it certifies
+        the exact drain every buffered adaptive flit falls back to.
+
+    Plus the escape-class CDG acyclicity: the escape class routes by
+    the same static table, so its dependency graph is
+    `dependency_edges(r)` — a cycle there breaks the Duato argument
+    even if every individual choice can still reach an escape entry.
+
+    Returns (diagnostics, n_adaptive_choices).
+    """
+    from repro.core.routing import productive_ports
+
+    t = r.topo
+    n, P = t.n, r.max_ports
+    out: list[Diagnostic] = []
+    prod = productive_ports(r)
+    d_idx, u_idx, p_idx = np.nonzero(prod)
+    n_choices = len(d_idx)
+    if n_choices == 0:
+        return out, 0
+
+    # (a) minimality of every masked port
+    hops = csgraph.shortest_path(t.adjacency(), unweighted=True)
+    ch = r.out_ch[u_idx, p_idx].astype(np.int64)
+    undeclared = ch < 0
+    if undeclared.any():
+        j = int(np.argmax(undeclared))
+        out.append(diag(
+            "RT005",
+            f"productive port (dst={int(d_idx[j])}, node={int(u_idx[j])},"
+            f" port={int(p_idx[j])}) has no declared channel",
+            target=_target(r), n_bad=int(undeclared.sum()),
+            choice=(int(d_idx[j]), int(u_idx[j]), int(p_idx[j]))))
+    ok = ~undeclared
+    w = np.where(ok, r.ch_dst[np.clip(ch, 0, max(r.n_channels - 1, 0))],
+                 0)
+    hw = hops[w, d_idx]
+    hu = hops[u_idx, d_idx]
+    non_min = ok & ~(np.isfinite(hw) & np.isfinite(hu) & (hw + 1 == hu))
+    if non_min.any():
+        j = int(np.argmax(non_min))
+        out.append(diag(
+            "RT005",
+            f"productive port (dst={int(d_idx[j])}, node={int(u_idx[j])},"
+            f" port={int(p_idx[j])}) is not minimal: next node "
+            f"{int(w[j])} is {hw[j]:.0f} hop(s) from the destination, "
+            f"node {int(u_idx[j])} is {hu[j]:.0f}",
+            target=_target(r), n_bad=int(non_min.sum()),
+            choice=(int(d_idx[j]), int(u_idx[j]), int(p_idx[j])),
+            next_node=int(w[j])))
+    ok &= ~non_min
+
+    # (c) escape deliverability from every post-hop (w, q, dst) state
+    if max_hops is None:
+        max_hops = 4 * n
+    live = ok & (w != d_idx)            # arrival at dst needs no escape
+    idx0 = np.flatnonzero(live)
+    cur = w[idx0].copy()
+    q = r.ch_in_port[ch[idx0]].astype(np.int64)
+    dst = d_idx[idx0]
+    alive = np.ones(len(idx0), dtype=bool)
+    for _ in range(max_hops):
+        if not alive.any():
+            break
+        p = r.table[dst[alive], cur[alive], q[alive]].astype(np.int64)
+        c2 = r.out_ch[cur[alive], np.clip(p, 0, P - 1)]
+        step_ok = (p >= 0) & (c2 >= 0)
+        idx = np.flatnonzero(alive)
+        if (~step_ok).any():            # dead end: escape lost
+            j = int(idx0[idx[np.argmax(~step_ok)]])
+            out.append(diag(
+                "RT005",
+                f"adaptive choice (dst={int(d_idx[j])}, "
+                f"node={int(u_idx[j])}, port={int(p_idx[j])}) loses its "
+                f"escape: static table dead-ends at node "
+                f"{int(cur[idx[np.argmax(~step_ok)]])} before reaching "
+                f"the destination",
+                target=_target(r),
+                choice=(int(d_idx[j]), int(u_idx[j]), int(p_idx[j])),
+                n_bad=int((~step_ok).sum())))
+            alive[idx[~step_ok]] = False
+            if not step_ok.any():
+                continue
+        idx = idx[step_ok]
+        c2 = c2[step_ok]
+        cur[idx] = r.ch_dst[c2]
+        q[idx] = r.ch_in_port[c2]
+        alive[idx[cur[idx] == dst[idx]]] = False
+    if alive.any():
+        j = int(idx0[np.flatnonzero(alive)[0]])
+        out.append(diag(
+            "RT005",
+            f"adaptive choice (dst={int(d_idx[j])}, node={int(u_idx[j])},"
+            f" port={int(p_idx[j])}): escape path still in flight after "
+            f"{max_hops} hops (escape livelock)",
+            target=_target(r),
+            choice=(int(d_idx[j]), int(u_idx[j]), int(p_idx[j])),
+            n_looping=int(alive.sum()), hop_bound=max_hops))
+
+    # escape-class CDG acyclicity (same table => same dependency edges)
+    edges = dependency_edges(r)
+    cycle = find_cdg_cycle(edges, r.n_channels)
+    if cycle:
+        hop_s = " -> ".join(f"{s}->{d}"
+                            for _, s, d in _decode_cycle(r, cycle))
+        out.append(diag(
+            "RT005",
+            f"escape-class channel-dependency cycle of length "
+            f"{len(cycle)}: {hop_s} (the escape drain can deadlock)",
+            target=_target(r), cycle=[int(c) for c in cycle],
+            cycle_nodes=_decode_cycle(r, cycle)))
+    return out, n_choices
+
+
 def certify_routing(r) -> RoutingCertificate:
-    """Run all three exhaustive checks and bundle the certificate."""
+    """Run all exhaustive checks and bundle the certificate."""
     cyc = check_acyclic(r)
     decl = check_table_channels(r)
     reach, n_pairs, max_hops = check_reachability(r)
+    esc, n_choices = check_escape(r)
     edges = dependency_edges(r)
     return RoutingCertificate(
         target=_target(r),
@@ -268,7 +410,8 @@ def certify_routing(r) -> RoutingCertificate:
         declared=not decl,
         n_channels=r.n_channels, n_dep_edges=len(edges),
         n_pairs_checked=n_pairs, max_hops_seen=max_hops,
-        diagnostics=tuple(cyc + decl + reach))
+        escape_safe=not esc, n_adaptive_choices=n_choices,
+        diagnostics=tuple(cyc + decl + reach + esc))
 
 
 def verify_routing(r, report: Report | None = None) -> RoutingCertificate:

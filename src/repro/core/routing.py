@@ -63,6 +63,11 @@ class Routing:
     #: and cached with the routing; None until certified.
     cert: object = None
 
+    #: productive-ports mask [N_dst, N, P] (minimal-adaptive routing,
+    #: DESIGN.md §15), computed lazily by `productive_ports` and cached
+    #: with the routing; None until first requested.
+    prod: object = None
+
     @property
     def n_channels(self) -> int:
         return len(self.ch_src)
@@ -300,6 +305,48 @@ def _build_routing_rooted(topo: Topology, root: int,
                    out_ch=out_ch, in_ch=in_ch, n_ports=out_counts,
                    table=table, prohibited_turns=n_prohibited,
                    total_turns=n_turns)
+
+
+def productive_ports(r: Routing) -> np.ndarray:
+    """[N_dst, N, P] bool: escape-safe minimal next hops (DESIGN.md §15).
+
+    `prod[d, u, p]` is True when forwarding a flit for destination d out
+    of node u's port p is both
+
+      * **minimal** — the channel at (u, p) leads to a neighbour w with
+        `hops(w, d) + 1 == hops(u, d)` (unweighted shortest-path
+        distances on the live adjacency; disconnected pairs are never
+        minimal), and
+      * **escape-safe** — after the hop the flit can still drain through
+        the escape class: either `w == d` (next stop is ejection) or the
+        static up*/down* table has a route from w's arrival in-port,
+        `table[d, w, ch_in_port] >= 0`.  The escape table is indexed by
+        the *arrival in-port*, whose turn restrictions keep the escape
+        channel-dependency graph acyclic — re-looking-up the injection
+        column at intermediate hops could retake a prohibited down->up
+        turn and deadlock.
+
+    This is the adaptive routing function of the Duato-style VC split in
+    `core.simulator` (VC 0 = escape, VCs 1.. = adaptive): any subset of
+    these choices keeps every buffered flit one table lookup away from a
+    deadlock-free drain.  Rows at the destination itself are False (the
+    table ejects).  The mask is cached on `r.prod`.
+    """
+    if r.prod is not None:
+        return r.prod
+    n, P = r.topo.n, r.max_ports
+    prod = np.zeros((n, n, P), dtype=bool)
+    if r.n_channels:
+        hops = csgraph.shortest_path(r.topo.adjacency(), unweighted=True)
+        u, w = r.ch_src, r.ch_dst
+        hw, hu = hops[w], hops[u]                     # [C, N] per dst
+        minimal = np.isfinite(hw) & (hw + 1 == hu)
+        esc = (w[:, None] == np.arange(n)[None, :]) | \
+            (r.table[:, w, r.ch_in_port].T >= 0)
+        prod[:, u, r.ch_out_port] = (minimal & esc).T
+        prod[np.arange(n), np.arange(n), :] = False
+    r.prod = prod
+    return prod
 
 
 # ---------------------------------------------------------------------

@@ -82,9 +82,21 @@ _MIX_N = np.uint32(0xC2B2AE3D)
 LAT_HIST_BINS = 16
 
 #: per-spec result keys added by `SimConfig(telemetry=True)`; every one
-#: has a leading rate axis R (DESIGN.md §13)
+#: has a leading rate axis R (DESIGN.md §13).  `link_occ_escape` /
+#: `link_occ_adaptive` split the per-VC occupancy sums into the escape
+#: class (VC 0) and the adaptive class (VCs 1..V-1) of the DESIGN.md §15
+#: VC partition — derived host-side from `link_occ_sum`, so they are
+#: padding-invariant like every other counter.
 TELEMETRY_KEYS = ("link_busy", "link_stall", "link_occ_sum", "link_util",
+                  "link_occ_escape", "link_occ_adaptive",
                   "inj_node", "eject_node", "lat_hist")
+
+#: rate-grid headroom above the static analytic bound (DESIGN.md §15):
+#: static sweeps plateau below the analytic estimate, adaptive sweeps
+#: can exceed it (routing around congestion), so their grid must extend
+#: further or it clips the most interesting region.
+STATIC_HEADROOM = 2.0
+ADAPTIVE_HEADROOM = 3.0
 
 
 class SimConfig(NamedTuple):
@@ -96,6 +108,9 @@ class SimConfig(NamedTuple):
     alloc: str = "auto"     # "auto" | "jnp" | "pallas"
     telemetry: bool = False  # flight recorder (DESIGN.md §13); off path
     #                          is bitwise identical to pre-telemetry code
+    routing: str = "static"  # "static" | "adaptive" (DESIGN.md §15);
+    #                          "static" is bitwise identical to the
+    #                          pre-adaptive simulator
 
 
 class SimState(NamedTuple):
@@ -145,6 +160,10 @@ class SimSpec:
     ch_depth: np.ndarray    # [C] pipeline depth (cycles per hop)
     traffic_cum: np.ndarray  # [N, N] cumulative traffic rows
     inj_weight: np.ndarray   # [N] relative injection rate per node
+    # productive-ports mask [N_dst, N, P] (DESIGN.md §15); consumed only
+    # by the adaptive runner — the static runner never reads it, so the
+    # leaf is dead-code-eliminated from the compiled static program
+    prod: np.ndarray = None
 
 
 def _traffic_arrays(traffic: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -163,6 +182,7 @@ def _traffic_arrays(traffic: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
 
 
 def make_spec(routing: Routing, traffic: np.ndarray) -> SimSpec:
+    from .routing import productive_ports
     depth = lm.hop_latency_cycles(routing.ch_len_mm, routing.topo.substrate)
     depth = np.maximum(np.asarray(depth, np.int32), 1)
     d = int(depth.max()) + 1
@@ -172,7 +192,8 @@ def make_spec(routing: Routing, traffic: np.ndarray) -> SimSpec:
         table=routing.table, out_ch=routing.out_ch, in_ch=routing.in_ch,
         ch_dst=routing.ch_dst, ch_in_port=routing.ch_in_port,
         ch_src=routing.ch_src, ch_out_port=routing.ch_out_port,
-        ch_depth=depth, traffic_cum=cum, inj_weight=inj_weight)
+        ch_depth=depth, traffic_cum=cum, inj_weight=inj_weight,
+        prod=productive_ports(routing))
 
 
 # =====================================================================
@@ -315,6 +336,58 @@ def _route_lookup(table, cred_pad, head_dst, cnt, n: int, p: int, v: int):
     return op_slot, eligible, starved
 
 
+def _route_lookup_adaptive(table, prod, cred_pad, head_dst, cnt,
+                           n: int, p: int, v: int):
+    """Minimal-adaptive route selection with escape fallback (§15).
+
+    The Duato-style VC partition: VC 0 is the escape class, following
+    the static up*/down* table (indexed by the arrival in-port, whose
+    channel-dependency graph is certified acyclic); VCs 1..V-1 are the
+    adaptive class, free to take any *productive* port — a minimal,
+    escape-safe next hop from `routing.productive_ports` — chosen by
+    downstream adaptive-credit count (deterministic first-max
+    tie-break).  A head flit prefers an adaptive hop whenever some
+    productive port has adaptive credit; otherwise it falls back to the
+    escape route, gated on VC-0 credit.  Ejection is always eligible.
+
+    Returns (op_slot, eligible, starved) shaped like `_route_lookup`
+    plus dvc [N, PI, V] — the downstream VC class of each choice (>= 1
+    adaptive, 0 escape).
+    """
+    PI = p + 1
+    node_idx = jnp.arange(n)[:, None, None]
+    port_idx = jnp.arange(PI)[None, :, None]
+
+    valid = cnt > 0
+    dst = jnp.where(valid, head_dst, 0)
+    # escape route: the static table, arrival-in-port indexed
+    op = table[dst, node_idx, port_idx].astype(jnp.int32)  # [N, PI, V]
+    op = jnp.where(valid, op, -3)
+    is_eject = op == Routing.EJECT
+    esc_slot = jnp.where(is_eject, p, op)
+    esc_credit = cred_pad[node_idx, jnp.clip(esc_slot, 0, p), 0] > 0
+
+    # adaptive candidates: productive ports weighted by the summed
+    # downstream adaptive-class credit (argmax = first-max tie-break)
+    cand = prod[dst, node_idx]                     # [N, PI, V, P]
+    cred_ad = jnp.sum(cred_pad[:, :p, 1:], axis=2)  # [N, P]
+    score = jnp.where(cand & (cred_ad[:, None, None, :] > 0),
+                      cred_ad[:, None, None, :], -1)
+    ad_port = jnp.argmax(score, axis=3).astype(jnp.int32)  # [N, PI, V]
+    ad_ok = jnp.max(score, axis=3) > 0
+    # downstream adaptive VC with the most credit at the chosen port
+    pcred = cred_pad[node_idx, jnp.clip(ad_port, 0, p - 1), 1:]
+    dvc_ad = 1 + jnp.argmax(pcred, axis=3).astype(jnp.int32)
+
+    use_ad = valid & ~is_eject & ad_ok
+    op_slot = jnp.where(use_ad, ad_port, esc_slot)
+    eligible = valid & (op_slot >= 0) & \
+        (use_ad | is_eject | ((esc_slot >= 0) & esc_credit))
+    starved = valid & ~is_eject & (esc_slot >= 0) & ~eligible
+    dvc = jnp.where(use_ad, dvc_ad, 0)
+    return op_slot, eligible, starved, dvc
+
+
 def _alloc_jnp(op_slot, eligible, rr_vc, rr_port):
     """Two-phase separable allocation (pure jnp; Pallas netstep oracle).
 
@@ -438,6 +511,14 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
     """
     N, P, V, B, C, D = nm, pm, cfg.n_vcs, cfg.buf_depth, cm, dm
     PI = P + 1
+    if cfg.routing not in ("static", "adaptive"):
+        raise ValueError(f"unknown routing mode {cfg.routing!r}; "
+                         f"choose 'static' or 'adaptive'")
+    adaptive = cfg.routing == "adaptive"
+    if adaptive and V < 2:
+        raise ValueError(
+            f"adaptive routing needs n_vcs >= 2 (VC 0 escape + at least "
+            f"one adaptive VC), got n_vcs={V}")
     alloc_fn = _alloc_pallas if alloc_impl == "pallas" else _alloc_jnp
     nn = jnp.arange(N)[:, None]
     pp = jnp.arange(PI)[None, :]
@@ -509,8 +590,12 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
             buf_t, state.head[..., None], axis=3)[..., 0]
         cred_pad = jnp.concatenate(
             [credits, jnp.full((N, 1, V), INF, jnp.int32)], axis=1)
-        op_slot, eligible, starved = _route_lookup(a.table, cred_pad,
-                                                   head_dst, cnt, N, P, V)
+        if adaptive:
+            op_slot, eligible, starved, dvc = _route_lookup_adaptive(
+                a.table, a.prod, cred_pad, head_dst, cnt, N, P, V)
+        else:
+            op_slot, eligible, starved = _route_lookup(
+                a.table, cred_pad, head_dst, cnt, N, P, V)
         rr_vc = state.rr % V
         rr_port = state.rr % a.pi
         win_mask, vc_choice, out_req = alloc_fn(op_slot, eligible,
@@ -518,7 +603,15 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
         port_wins = jnp.any(win_mask, axis=2)      # [N, PI]
 
         # ---- 5. winners: pop, move, credit ------------------------------
+        # wvc is the *source* VC lane popped at (node, in-port); w_dvc is
+        # the *downstream* VC lane the flit occupies after the hop.  The
+        # static path keeps them equal (bitwise-identical jaxpr); the
+        # adaptive path redirects to the class chosen by the route
+        # lookup, so the upstream credit return (freeing the popped
+        # lane) stays on wvc while the link VC tag and the downstream
+        # credit decrement move to w_dvc.
         wvc = vc_choice
+        w_dvc = dvc[nn, pp, wvc] if adaptive else wvc
         w_dst = head_dst[nn, pp, wvc]
         w_t = head_t[nn, pp, wvc]
         head = (state.head.at[nn, pp, wvc]
@@ -555,8 +648,8 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
         wslot = (t + ch_depth_pad[oc_w]) % D
         link_dst = link_dst.at[oc_w, wslot].set(w_dst)
         link_t = state.link_t.at[oc_w, wslot].set(w_t)
-        link_vc = state.link_vc.at[oc_w, wslot].set(wvc)
-        credits = credits.at[nn, jnp.clip(out_req, 0, P - 1), wvc].add(
+        link_vc = state.link_vc.at[oc_w, wslot].set(w_dvc)
+        credits = credits.at[nn, jnp.clip(out_req, 0, P - 1), w_dvc].add(
             -traverse.astype(jnp.int32))
 
         # ---- 6. flight recorder (telemetry mode only; DESIGN.md §13) ---
@@ -796,9 +889,12 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
             t_busy, t_stall, t_occ, t_inj, t_ej, t_hist = tel
             c, n = spec.c, spec.n
             busy = t_busy[i, :, :c]                        # [R, c]
+            occ = t_occ[i, :, :c, :]                       # [R, c, V]
             res.update(
                 link_busy=busy, link_stall=t_stall[i, :, :c],
-                link_occ_sum=t_occ[i, :, :c, :],
+                link_occ_sum=occ,
+                link_occ_escape=occ[:, :, 0],
+                link_occ_adaptive=occ[:, :, 1:].sum(axis=-1),
                 link_util=busy / float(meas),
                 inj_node=t_inj[i, :, :n], eject_node=t_ej[i, :, :n],
                 lat_hist=t_hist[i])
@@ -866,7 +962,8 @@ def saturation_throughput(routing: Routing, traffic: np.ndarray,
     around it.
     """
     analytic = routing.saturation_rate(traffic)
-    rates = saturation_rate_grid(analytic, n_rates)
+    rates = saturation_rate_grid(analytic, n_rates,
+                                 headroom=routing_headroom(cfg.routing))
     res = simulate(routing, traffic, rates, cfg)
     i = int(np.argmax(res["throughput"]))
     return dict(sim_saturation=float(res["throughput"][i]),
@@ -874,9 +971,21 @@ def saturation_throughput(routing: Routing, traffic: np.ndarray,
                 latency_at_sat=float(res["latency"][i]), sweep=res)
 
 
-def saturation_rate_grid(analytic: float, n_rates: int = 8) -> np.ndarray:
-    """Offered-rate grid bracketing the analytic saturation estimate."""
-    hi = min(1.0, 2.0 * analytic)
+def routing_headroom(routing: str) -> float:
+    """Default rate-grid ceiling multiplier for a routing mode: adaptive
+    sweeps must extend past the *static* analytic bound (they can beat
+    it), static sweeps keep the historical 2x bracket."""
+    return ADAPTIVE_HEADROOM if routing == "adaptive" else STATIC_HEADROOM
+
+
+def saturation_rate_grid(analytic: float, n_rates: int = 8,
+                         headroom: float = STATIC_HEADROOM) -> np.ndarray:
+    """Offered-rate grid bracketing the analytic saturation estimate.
+
+    `headroom` parameterizes the ceiling above the (static) analytic
+    bound; the default reproduces the historical static grid exactly.
+    """
+    hi = min(1.0, headroom * analytic)
     return np.linspace(max(analytic * 0.25, 1e-3), hi, n_rates)
 
 

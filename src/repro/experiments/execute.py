@@ -86,10 +86,18 @@ def _run_chunk(engine: SweepEngine, bucket: Bucket, chunk: list,
         return [None] * len(chunk)
     rates = np.stack([ps.rates for ps in chunk]).astype(np.float32)
     specs = [ps.spec for ps in chunk]
+    # per-scenario routing overrides (Scenario.routing, DESIGN.md §15):
+    # the bucket key carries the effective mode, so one engine serves
+    # both — only the SimConfig handed to run_batch changes, and the
+    # engine's runner cache keys on it
+    cfg = engine.cfg if bucket.key.routing == engine.cfg.routing \
+        else engine.cfg._replace(routing=bucket.key.routing)
     if bucket.key.kind == "workload":
         return engine.run_workloads(specs, [ps.sched_spec for ps in chunk],
-                                    rates, single_program=single_program)
-    return engine.run_specs(specs, rates, single_program=single_program)
+                                    rates, single_program=single_program,
+                                    cfg=cfg)
+    return engine.run_specs(specs, rates, single_program=single_program,
+                            cfg=cfg)
 
 
 def execute(pl: Plan, engine: SweepEngine | None = None,

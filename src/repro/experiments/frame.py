@@ -28,7 +28,7 @@ from .scenario import Experiment, Scenario
 #: stable tidy-row column order (scenario tags append after these)
 COLUMNS = (
     "experiment", "backend", "status", "topology", "n", "substrate",
-    "roles", "area_mm2", "traffic", "kind", "rates",
+    "roles", "area_mm2", "traffic", "kind", "rates", "routing",
     "faults", "failed_links", "failed_chiplets",
     "analytic_saturation", "sim_saturation", "rel_throughput",
     "abs_throughput_gbps", "latency_ns", "avg_hops", "chiplet_area_mm2",
@@ -46,6 +46,7 @@ def _identity_row(exp: Experiment, s: Scenario, status: str,
                substrate=s.resolved_substrate, roles=s.roles,
                area_mm2=s.resolved_area, traffic=s.traffic_name,
                kind=s.kind, rates=s.rates.describe(),
+               routing=s.effective_routing(exp.cfg),
                faults=s.fault_name,
                failed_links=fs.n_links if fs else 0,
                failed_chiplets=fs.n_chiplets if fs else 0, error=error,

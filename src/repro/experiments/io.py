@@ -32,7 +32,10 @@ import numpy as np
 #: machine-readable `diag_code` column (DP006/FT001 skips, EX001 failed
 #: chunks), synth rows carry rejection codes, and `Report.to_json`
 #: diagnostics artifacts share this stamp
-SCHEMA_VERSION = 4
+#: v5: adaptive routing (DESIGN.md §15) — tidy rows gain a `routing`
+#: column (effective mode per scenario), per-link heatmap rows gain
+#: `occ_escape` / `occ_adaptive` (escape-vs-adaptive VC-class occupancy)
+SCHEMA_VERSION = 5
 
 
 def stable_columns(rows: Sequence[dict],

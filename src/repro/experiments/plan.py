@@ -59,6 +59,9 @@ class BucketKey:
     n_rates: int
     shape: PadShape | None      # engine-bucketed padded shape
     k_pad: int                  # bucketed phase-axis size (0 = static)
+    #: effective routing mode ("static" | "adaptive"); part of the key
+    #: because the two modes compile different programs (DESIGN.md §15)
+    routing: str = "static"
 
 
 @dataclasses.dataclass
@@ -93,7 +96,8 @@ class Plan:
             shape = (f"N{k.shape.n} P{k.shape.p} C{k.shape.c} D{k.shape.d}"
                      if k.shape else "-")
             lines.append(f"  [{k.kind:8s}] R={k.n_rates} K={k.k_pad} "
-                         f"shape=({shape}) x{len(b.items)}")
+                         f"routing={k.routing} shape=({shape}) "
+                         f"x{len(b.items)}")
         for i, reason in self.skipped:
             lines.append(f"  skip #{i}: {reason}")
         return "\n".join(lines)
@@ -234,22 +238,24 @@ def plan(experiment: Experiment, engine: SweepEngine | None = None,
                 continue
             tm, schedule = _resolve_traffic(s, topo, meas)
             analytic = routing.saturation_rate(tm)
+            eff = s.effective_routing(experiment.cfg)
             spec = sched_spec = rates = None
             if sim_backend:
                 spec = make_spec(routing, tm)
                 sched_spec = schedule.compile() \
                     if schedule is not None else None
-                rates = np.asarray(s.rates.resolve(analytic), np.float64)
+                rates = np.asarray(
+                    s.rates.resolve(analytic, routing=eff), np.float64)
                 shape = engine.bucket_shape(
                     PadShape(n=spec.n, p=spec.p, c=spec.c, d=spec.d))
                 k = sched_spec.k if sched_spec is not None else 0
                 k_pad = _round_up(k, engine.k_round) \
                     if engine.bucket and k else k
                 key = BucketKey(kind=s.kind, n_rates=len(rates),
-                                shape=shape, k_pad=k_pad)
+                                shape=shape, k_pad=k_pad, routing=eff)
             else:
                 key = BucketKey(kind="analytic", n_rates=0, shape=None,
-                                k_pad=0)
+                                k_pad=0, routing=eff)
             ps = PlannedScenario(index=i, scenario=s, topo=topo,
                                  routing=routing, traffic=tm,
                                  analytic=float(analytic), spec=spec,
@@ -261,7 +267,9 @@ def plan(experiment: Experiment, engine: SweepEngine | None = None,
     if single_program and sim_backend:
         merged: dict[tuple, Bucket] = {}
         for b in out:
-            mk = (b.key.kind, b.key.n_rates)
+            # routing is part of the merge key: the two modes compile
+            # different programs, so they can never share one executable
+            mk = (b.key.kind, b.key.n_rates, b.key.routing)
             if mk not in merged:
                 merged[mk] = Bucket(key=b.key, items=list(b.items))
             else:
@@ -270,7 +278,8 @@ def plan(experiment: Experiment, engine: SweepEngine | None = None,
                 m.key = BucketKey(
                     kind=b.key.kind, n_rates=b.key.n_rates,
                     shape=engine.bucket_shape(PadShape.of(specs)),
-                    k_pad=max(m.key.k_pad, b.key.k_pad))
+                    k_pad=max(m.key.k_pad, b.key.k_pad),
+                    routing=b.key.routing)
                 m.items += b.items
         out = list(merged.values())
     return Plan(experiment=experiment, buckets=out, skipped=skipped,

@@ -35,7 +35,8 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core import topology as T
-from repro.core.simulator import SimConfig, saturation_rate_grid
+from repro.core.simulator import (SimConfig, routing_headroom,
+                                  saturation_rate_grid)
 
 
 # ---------------------------------------------------------------------
@@ -44,13 +45,25 @@ from repro.core.simulator import SimConfig, saturation_rate_grid
 
 @dataclasses.dataclass(frozen=True)
 class SaturationGrid:
-    """Offered-rate grid seeded from the analytic saturation bound."""
-    n_rates: int = 6
+    """Offered-rate grid seeded from the analytic saturation bound.
 
-    def resolve(self, analytic: float) -> np.ndarray:
-        return saturation_rate_grid(analytic, self.n_rates)
+    `headroom` overrides the grid's ceiling multiplier above the static
+    analytic bound; None picks the routing-mode default (static 2x,
+    adaptive 3x — adaptive sweeps can exceed the static bound, see
+    DESIGN.md §15), so the same policy object works for both modes.
+    """
+    n_rates: int = 6
+    headroom: float | None = None
+
+    def resolve(self, analytic: float,
+                routing: str = "static") -> np.ndarray:
+        h = self.headroom if self.headroom is not None \
+            else routing_headroom(routing)
+        return saturation_rate_grid(analytic, self.n_rates, headroom=h)
 
     def describe(self) -> str:
+        if self.headroom is not None:
+            return f"saturation_grid({self.n_rates},x{self.headroom:g})"
         return f"saturation_grid({self.n_rates})"
 
 
@@ -66,7 +79,8 @@ class ExplicitRates:
         if not self.rates:
             raise ValueError("ExplicitRates needs at least one rate")
 
-    def resolve(self, analytic: float) -> np.ndarray:
+    def resolve(self, analytic: float,
+                routing: str = "static") -> np.ndarray:
         return np.asarray(self.rates, np.float64)
 
     def describe(self) -> str:
@@ -144,6 +158,7 @@ class Scenario:
     rates: RatePolicy = SaturationGrid()
     fit_schedule: bool = True        # fit workloads to the meas. window
     faults: object = None            # repro.faults.FaultSet | None
+    routing: str | None = None       # None = inherit Experiment cfg
     tags: tuple = ()                 # extra ((column, value), ...) pairs
 
     def __post_init__(self):
@@ -152,6 +167,10 @@ class Scenario:
         if bad:
             raise ValueError(f"tags {bad} collide with reserved result "
                              f"columns; pick different tag names")
+        if self.routing not in (None, "static", "adaptive"):
+            raise ValueError(f"unknown routing mode {self.routing!r}; "
+                             f"choose 'static', 'adaptive' or None "
+                             f"(inherit the experiment SimConfig)")
         if self.faults is not None:
             from repro.faults import FaultSet   # deferred: optional layer
             if not isinstance(self.faults, FaultSet):
@@ -207,6 +226,11 @@ class Scenario:
     @property
     def fault_name(self) -> str:
         return self.faults.name if self.degraded else "none"
+
+    def effective_routing(self, cfg: SimConfig) -> str:
+        """Routing mode this scenario runs under a given SimConfig:
+        its own `routing` override, else the config's."""
+        return self.routing if self.routing is not None else cfg.routing
 
     @property
     def label(self) -> str:

@@ -19,7 +19,11 @@ Row discipline:
     link incident to a dead chiplet;
   * `util` is busy cycles / measured cycles in [0, 1]; `occ_mean` is
     the mean number of buffered flits at the channel's downstream input
-    port over the measured window.
+    port over the measured window;
+  * `occ_escape` / `occ_adaptive` split `occ_mean` by VC class
+    (DESIGN.md §15): VC 0 is the deadlock-free escape drain, VCs 1..V-1
+    are the adaptive class — under `routing="static"` the adaptive
+    column still reports the static occupancy of those lanes.
 """
 from __future__ import annotations
 
@@ -29,7 +33,7 @@ import numpy as np
 LINK_COLUMNS = (
     "experiment", "topology", "n", "substrate", "traffic", "faults",
     "status", "rate", "channel", "src", "dst", "len_mm", "depth_cycles",
-    "busy", "util", "stalls", "occ_mean",
+    "busy", "util", "stalls", "occ_mean", "occ_escape", "occ_adaptive",
 )
 
 
@@ -98,6 +102,8 @@ def link_rows(planned, res: dict, meas: int, *, experiment: str = "",
     occ = np.asarray(res["link_occ_sum"][k])        # [c, V]
     util = busy / float(max(meas, 1))
     occ_mean = occ.sum(axis=1) / float(max(meas, 1))
+    occ_esc = occ[:, 0] / float(max(meas, 1))
+    occ_ad = occ[:, 1:].sum(axis=1) / float(max(meas, 1))
     depth = planned.spec.ch_depth if planned.spec is not None else None
     tags = dict(s.tags)
 
@@ -115,10 +121,13 @@ def link_rows(planned, res: dict, meas: int, *, experiment: str = "",
                 depth_cycles=int(depth[c]) if depth is not None else None,
                 busy=int(busy[c]), util=round(float(util[c]), 6),
                 stalls=int(stall[c]),
-                occ_mean=round(float(occ_mean[c]), 4))
+                occ_mean=round(float(occ_mean[c]), 4),
+                occ_escape=round(float(occ_esc[c]), 4),
+                occ_adaptive=round(float(occ_ad[c]), 4))
             for c in range(len(busy))]
     for u, v in dead_links(s):
         for a, b in ((u, v), (v, u)):
             rows.append(row(status="dead", channel=-1, src=a, dst=b,
-                            busy=0, util=0.0, stalls=0, occ_mean=0.0))
+                            busy=0, util=0.0, stalls=0, occ_mean=0.0,
+                            occ_escape=0.0, occ_adaptive=0.0))
     return rows

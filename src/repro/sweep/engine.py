@@ -94,7 +94,8 @@ class SweepEngine:
 
     # ---- core entry points ---------------------------------------------
     def run_specs(self, specs: Sequence[SimSpec], rates,
-                  single_program: bool = False) -> list[dict]:
+                  single_program: bool = False,
+                  cfg: SimConfig | None = None) -> list[dict]:
         """Run heterogeneous specs through few batched programs.
 
         rates: [R] shared or [S, R] per-spec.  Returns one result dict
@@ -102,30 +103,38 @@ class SweepEngine:
         single_program=True pads every spec to one global shape so the
         whole sweep is exactly one compiled program (at the cost of
         padding small-radix topologies to the largest radix present).
+        `cfg` overrides the engine's SimConfig for this call only (the
+        experiment executor uses it for per-scenario routing modes,
+        DESIGN.md §15); the runner cache keys on the config, so
+        overrides coexist with the engine default.
         """
-        return self._run_grouped(specs, rates, None, single_program)
+        return self._run_grouped(specs, rates, None, single_program, cfg)
 
     def run_workloads(self, specs: Sequence[SimSpec], schedules, rates,
-                      single_program: bool = False) -> list[dict]:
+                      single_program: bool = False,
+                      cfg: SimConfig | None = None) -> list[dict]:
         """Run (spec, phase-schedule) pairs through few batched programs.
 
         schedules: one `simulator.SchedSpec` (or compilable
         `workloads.Schedule`) per spec.  Groups also bucket the phase
         axis (`k_round`) so workloads with similar phase counts share
         executables.  Result dicts gain the per-phase counters of
-        `run_batch(..., schedules=...)`.
+        `run_batch(..., schedules=...)`.  `cfg` as in `run_specs`.
         """
         if len(schedules) != len(specs):
             raise ValueError(
                 f"schedules {len(schedules)} != specs {len(specs)}")
         schedules = [s.compile() if hasattr(s, "compile") else s
                      for s in schedules]
-        return self._run_grouped(specs, rates, schedules, single_program)
+        return self._run_grouped(specs, rates, schedules, single_program,
+                                 cfg)
 
     # keys whose leading axis is NOT the rate grid (never trimmed)
     _PER_PHASE_KEYS = ("phase_cycles",)
 
-    def _run_grouped(self, specs, rates, schedules, single_program):
+    def _run_grouped(self, specs, rates, schedules, single_program,
+                     cfg: SimConfig | None = None):
+        cfg = cfg or self.cfg
         s = len(specs)
         rates = np.asarray(rates, np.float32)
         if rates.ndim == 1:
@@ -178,7 +187,7 @@ class SweepEngine:
             with trace("sweep.group", cat="sweep", specs=len(g_specs),
                        shape=str(shape), k_pad=k_pad,
                        kind="static" if g_scheds is None else "workload"):
-                out = sim.run_batch(g_specs, g_rates, self.cfg,
+                out = sim.run_batch(g_specs, g_rates, cfg,
                                     pad_shape=shape, schedules=g_scheds,
                                     k_pad=k_pad or None)
             for j, i in enumerate(idxs):

@@ -78,6 +78,7 @@ class BatchSpec(NamedTuple):
     ch_depth: np.ndarray     # [S, C] int32
     traffic_cum: np.ndarray  # [S, N, N] float32
     inj_weight: np.ndarray   # [S, N] float32
+    prod: np.ndarray         # [S, N, N, P] bool (pad region all-False)
     pi: np.ndarray           # [S] int32
 
 
@@ -107,6 +108,12 @@ def pad_spec(spec, shape: PadShape) -> dict:
     cum[:n, :n] = spec.traffic_cum
     inj = np.zeros((N,), np.float32)
     inj[:n] = spec.inj_weight
+    # productive-ports mask (DESIGN.md §15): pad region all-False, so an
+    # adaptive selection can never name a padded destination, node or
+    # port — padded lanes fall back to the (all -1) escape table and
+    # stay inert exactly like the static path.
+    pr = np.zeros((N, N, P), bool)
+    pr[:n, :n, :p] = spec.prod
     return dict(
         table=table,
         out_ch=pad2(spec.out_ch, -1), in_ch=pad2(spec.in_ch, -1),
@@ -114,7 +121,7 @@ def pad_spec(spec, shape: PadShape) -> dict:
         ch_in_port=padc(spec.ch_in_port, 0),
         ch_out_port=padc(spec.ch_out_port, 0),
         ch_depth=padc(spec.ch_depth, 1),
-        traffic_cum=cum, inj_weight=inj,
+        traffic_cum=cum, inj_weight=inj, prod=pr,
         pi=np.int32(p + 1))
 
 

@@ -1,0 +1,41 @@
+"""Adaptive-routing subsystem facade (repro.adaptive, DESIGN.md §15)."""
+import numpy as np
+
+import repro.adaptive as A
+from repro.core import topology as T, traffic as TR
+from repro.core.routing import build_routing
+from repro.core.simulator import SimConfig
+
+CFG = SimConfig(cycles=300, warmup=100)
+
+
+def test_adaptive_config_derivation():
+    cfg = A.adaptive_config()
+    assert cfg.routing == "adaptive" and cfg.n_vcs >= 2
+    base = SimConfig(n_vcs=1, cycles=50)
+    up = A.adaptive_config(base)
+    assert up.n_vcs == 2 and up.cycles == 50
+    pinned = A.adaptive_config(base, n_vcs=6)
+    assert pinned.n_vcs == 6
+
+
+def test_facade_reexports():
+    r = build_routing(T.build("mesh", 16))
+    prod = A.productive_ports(r)
+    assert prod.shape == (16, 16, r.max_ports)
+    diags, n = A.check_escape(r)
+    assert diags == [] and n > 0
+    assert A.routing_headroom("adaptive") == A.ADAPTIVE_HEADROOM
+    assert A.routing_headroom("static") == A.STATIC_HEADROOM
+
+
+def test_compare_saturation_reports_both_modes():
+    r = build_routing(T.build("mesh", 16))
+    out = A.compare_saturation(r, TR.uniform(r.topo), CFG, n_rates=4)
+    assert out["static"] > 0 and out["adaptive"] > 0
+    assert out["gain"] == out["adaptive"] / out["static"] - 1.0
+    assert out["analytic"] > 0
+    # the two sweeps really ran different grids (adaptive headroom)
+    sg = out["static_sweep"]["sweep"]["rate"]
+    ag = out["adaptive_sweep"]["sweep"]["rate"]
+    assert ag[-1] > sg[-1]

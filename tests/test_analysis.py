@@ -314,9 +314,9 @@ def test_fault_rejected_skip_code():
     assert pl.skip_codes == {0: "FT001"}
 
 
-def test_schema_v4():
+def test_schema_v5():
     from repro.experiments.io import SCHEMA_VERSION
-    assert SCHEMA_VERSION == 4
+    assert SCHEMA_VERSION == 5
 
 
 # ---------------------------------------------------------------------
@@ -470,3 +470,119 @@ def test_cli_fails_on_warning_threshold(capsys):
     assert rc == 1                       # DP001 link-range warning
     rc2 = main(["torus", "-n", "36", "--substrate", "organic", "-q"])
     assert rc2 == 0                      # warnings pass the error gate
+
+
+# ---------------------------------------------------------------------
+# RT005: escape certification for minimal-adaptive routing (§15)
+# ---------------------------------------------------------------------
+
+def test_rt005_registered():
+    slug, sev, desc = CODES["RT005"]
+    assert slug == "escape-unsafe" and sev == "error"
+
+
+@pytest.mark.parametrize("name", ["folded_hexa_torus", "mesh", "torus",
+                                  "hexamesh"])
+def test_escape_certified_on_builtins(name):
+    """Every Table III family certifies RT005-clean: the productive-
+    ports mask is non-trivial and every adaptive choice keeps a
+    deliverable escape."""
+    from repro.analysis.routing_verify import check_escape
+    r = routing_for(T.build(name, 36))
+    diags, n_choices = check_escape(r)
+    assert diags == [] and n_choices > 0
+    cert = certify_routing(r)
+    assert cert.ok and cert.escape_safe
+    assert cert.n_adaptive_choices == n_choices
+
+
+def test_productive_ports_structure():
+    """Mask semantics: all-False on the diagonal, every True entry is a
+    strictly minimal, escape-safe declared channel."""
+    import scipy.sparse.csgraph as csg
+    from repro.core.routing import productive_ports
+    r = routing_for(T.build("folded_hexa_torus", 16))
+    prod = productive_ports(r)
+    n, P = r.topo.n, r.max_ports
+    assert prod.shape == (n, n, P) and prod.dtype == bool
+    assert not prod[np.arange(n), np.arange(n)].any()
+    hops = csg.shortest_path(r.topo.adjacency(), unweighted=True)
+    for d, u, p in np.argwhere(prod):
+        c = int(r.out_ch[u, p])
+        assert c >= 0
+        w = int(r.ch_dst[c])
+        assert hops[w, d] + 1 == hops[u, d]
+        q = int(r.ch_in_port[c])
+        assert w == d or r.table[d, w, q] >= 0
+    # the mask is non-trivial; a (dst, node) MAY legitimately have no
+    # escape-safe minimal port (up*/down* escape routes are not always
+    # minimal) — those states simply ride the escape class
+    assert prod.any()
+    assert prod.sum() >= n * (n - 1) // 2
+
+
+def test_rt005_flags_escape_unsafe_mask():
+    """Hand-poisoning the productive-ports mask with a non-minimal (or
+    escape-losing) entry must yield an RT005 witness naming it."""
+    from repro.core.routing import productive_ports
+    r = routing_for(T.build("mesh", 16))
+    prod = productive_ports(r).copy()
+    # add a port that walks AWAY from the destination: node 0's port to
+    # node 1 while routing to node 1's far side... pick (d=0, u=0+1 hop)
+    # any declared port at node 5 that is not already productive for d=0
+    cand = [(5, p) for p in range(r.max_ports)
+            if r.out_ch[5, p] >= 0 and not prod[0, 5, p]]
+    assert cand, "mesh node 5 should have a non-minimal port for dst 0"
+    u, p = cand[0]
+    poisoned = dataclasses.replace(r, cert=None)
+    poisoned.prod = prod
+    prod[0, u, p] = True
+    from repro.analysis.routing_verify import check_escape
+    diags, _ = check_escape(poisoned)
+    assert diags and all(d.code == "RT005" for d in diags)
+    w = diags[0].witness_dict()
+    assert w["choice"][0] == 0 and w["choice"][1] == u
+    cert = certify_routing(poisoned)
+    assert not cert.ok and not cert.escape_safe
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=12, deadline=None)
+def test_escape_property_random_graphs(seed):
+    """Satellite property (ISSUE #9): on random connected degree-
+    bounded topologies the escape-class CDG is acyclic and every
+    (src, dst) pair stays reachable when the adaptive function is in
+    play — i.e. RT005 + RT002/RT004 certify clean."""
+    import networkx as nx
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 24))
+    g = nx.gnm_random_graph(n, int(n * 1.8), seed=seed)
+    if not nx.is_connected(g):
+        g = nx.compose(g, nx.path_graph(n))
+    edges = np.array(sorted(tuple(sorted(e)) for e in g.edges()),
+                     dtype=np.int32)
+    pos = rng.uniform(0, np.sqrt(n), size=(n, 2))
+    topo = T.Topology(name="rand", n=n, pos=pos, edges=edges,
+                      substrate="organic", chiplet_area_mm2=74.0)
+    cert = certify_routing(routing_for(topo))
+    assert cert.ok, [str(d) for d in cert.diagnostics]
+    assert cert.escape_safe and cert.n_adaptive_choices > 0
+    assert cert.n_pairs_checked == n * (n - 1)
+
+
+@given(seed=st.integers(0, 5_000), k=st.integers(1, 2))
+@settings(max_examples=10, deadline=None)
+def test_escape_property_faulted(seed, k):
+    """Same property under sampled fault masks k<=2 on a Table III
+    topology: the degraded routing (and its productive-ports mask)
+    still certifies RT005-clean."""
+    from repro.faults import FaultError, sample_faults
+    topo = T.build("folded_hexa_torus", 36)
+    try:
+        fs = sample_faults(topo, k, "random", seed=seed)
+        degraded = fs.apply(topo)
+    except FaultError:
+        return                          # disconnecting mask: resampled
+    cert = certify_routing(routing_for(degraded))
+    assert cert.ok and cert.escape_safe, \
+        [str(d) for d in cert.diagnostics]

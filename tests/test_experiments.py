@@ -247,10 +247,10 @@ class _FailingEngine(SweepEngine):
     """Raises for any chunk containing the poisoned topology size."""
     poison_n: int = 0
 
-    def run_specs(self, specs, rates, single_program=False):
+    def run_specs(self, specs, rates, single_program=False, cfg=None):
         if any(s.n == self.poison_n for s in specs):
             raise RuntimeError("injected failure")
-        return super().run_specs(specs, rates, single_program)
+        return super().run_specs(specs, rates, single_program, cfg=cfg)
 
 
 def test_partial_failure_isolation():
@@ -448,3 +448,91 @@ def test_workload_scenario_with_chiplet_faults_masks_every_phase():
 def test_scenario_faults_type_error():
     with pytest.raises(TypeError, match="FaultSet"):
         X.Scenario("mesh", 16, faults=[(0, 1)])
+
+
+# ---------------------------------------------------------------------
+# per-scenario routing modes (DESIGN.md §15)
+# ---------------------------------------------------------------------
+
+def test_scenario_routing_validation():
+    X.Scenario("mesh", 16, routing="adaptive")
+    X.Scenario("mesh", 16, routing=None)
+    with pytest.raises(ValueError, match="routing"):
+        X.Scenario("mesh", 16, routing="wild")
+    s = X.Scenario("mesh", 16)
+    assert s.effective_routing(CFG) == "static"
+    assert s.effective_routing(CFG._replace(routing="adaptive")) \
+        == "adaptive"
+    so = X.Scenario("mesh", 16, routing="adaptive")
+    assert so.effective_routing(CFG) == "adaptive"
+
+
+def test_plan_buckets_split_by_routing():
+    """Static and adaptive scenarios of the same shape land in
+    different buckets (different compiled programs), and the bucket key
+    carries the effective mode."""
+    exp = X.Experiment(
+        [X.Scenario("mesh", 16, rates=X.ExplicitRates((0.1, 0.3))),
+         X.Scenario("mesh", 16, rates=X.ExplicitRates((0.1, 0.3)),
+                    routing="adaptive")], cfg=CFG)
+    pl = X.plan(exp)
+    keys = sorted(b.key.routing for b in pl.buckets)
+    assert keys == ["adaptive", "static"]
+    # single_program mode must NOT merge across routing modes
+    pl2 = X.plan(exp, single_program=True)
+    assert len(pl2.buckets) == 2
+
+
+def test_execute_routing_override_matches_direct():
+    """A routing="adaptive" scenario produces exactly the counters of a
+    direct adaptive run; the static sibling stays on the engine default."""
+    rates = (0.1, 0.4)
+    exp = X.Experiment(
+        [X.Scenario("mesh", 16, rates=X.ExplicitRates(rates)),
+         X.Scenario("mesh", 16, rates=X.ExplicitRates(rates),
+                    routing="adaptive")], cfg=CFG)
+    frame = X.run(exp)
+    assert [r["routing"] for r in frame.rows] == ["static", "adaptive"]
+    from repro.core.routing import cached_routing
+    from repro.core import traffic as TR
+    from repro.core.simulator import make_spec
+    topo, routing = cached_routing("mesh", 16, "organic", 74.0,
+                                   "homogeneous")
+    spec = make_spec(routing, TR.uniform(topo))
+    rr = np.asarray(rates, np.float32)[None, :]
+    for i, mode in enumerate(("static", "adaptive")):
+        direct = run_batch([spec], rr, CFG._replace(routing=mode))[0]
+        got = frame.results[i]
+        for k in RAW:
+            np.testing.assert_array_equal(
+                np.asarray(got[k]), np.asarray(direct[k]),
+                err_msg=f"{mode}/{k}")
+
+
+def test_saturation_grid_routing_headroom():
+    """SaturationGrid resolves a wider ceiling for adaptive scenarios;
+    explicit headroom pins it for both modes."""
+    from repro.core.simulator import saturation_rate_grid
+    g = X.SaturationGrid(n_rates=5)
+    np.testing.assert_array_equal(
+        g.resolve(0.3), saturation_rate_grid(0.3, 5))
+    ad = g.resolve(0.3, routing="adaptive")
+    assert ad[-1] > g.resolve(0.3)[-1]
+    pinned = X.SaturationGrid(n_rates=5, headroom=2.5)
+    np.testing.assert_array_equal(
+        pinned.resolve(0.3, routing="static"),
+        pinned.resolve(0.3, routing="adaptive"))
+    assert "x2.5" in pinned.describe()
+
+
+def test_routing_column_in_frame_csv(tmp_path):
+    exp = X.Experiment(
+        [X.Scenario("mesh", 16, rates=X.ExplicitRates((0.1,)),
+                    routing="adaptive")], cfg=CFG)
+    frame = X.run(exp)
+    p = tmp_path / "out.csv"
+    frame.to_csv(str(p))
+    head = p.read_text().splitlines()
+    assert "routing" in head[0].split(",")
+    i = head[0].split(",").index("routing")
+    assert head[1].split(",")[i] == "adaptive"

@@ -178,3 +178,50 @@ def test_sampler_errors():
     with pytest.raises(F.FaultError, match="survivable"):
         F.sample_faults(topo, len(topo.edges), "random")
     assert F.sample_faults(topo, 0, "random").empty
+
+
+# ---------------------------------------------------------------------
+# adaptive routing x faults (DESIGN.md §15): the productive-ports mask
+# is built from the DEGRADED structure, so adaptive selection can never
+# name a dead port
+# ---------------------------------------------------------------------
+
+def test_adaptive_mask_never_names_dead_ports():
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from repro.core.routing import productive_ports
+
+    @given(seed=st.integers(0, 5_000), k=st.integers(1, 2))
+    @settings(max_examples=10, deadline=None)
+    def prop(seed, k):
+        topo = T.build("mesh", 36)
+        try:
+            fs = F.sample_faults(topo, k, "random", seed=seed)
+            degraded = fs.apply(topo)
+        except F.FaultError:
+            return
+        r = routing_for(degraded)
+        prod = productive_ports(r)
+        dead = {tuple(sorted(lk)) for lk in fs.links}
+        assert dead, "sampler produced no link faults"
+        for d, u, p in np.argwhere(prod):
+            c = int(r.out_ch[u, p])
+            assert c >= 0, "productive port without a declared channel"
+            hop = tuple(sorted((int(r.ch_src[c]), int(r.ch_dst[c]))))
+            assert hop not in dead, \
+                f"adaptive mask names dead link {hop} at (d={d}, u={u})"
+
+    prop()
+
+
+def test_adaptive_simulates_through_faults():
+    """Adaptive mode on a degraded topology delivers traffic (the mask
+    and escape table both come from the surviving structure)."""
+    from repro.core.simulator import SimConfig, make_spec, run_batch
+    topo = T.build("mesh", 36)
+    fs = F.sample_faults(topo, 2, "random", seed=7)
+    r = routing_for(fs.apply(topo))
+    spec = make_spec(r, fs.mask_traffic(TR.uniform(topo)))
+    cfg = SimConfig(cycles=300, warmup=100, routing="adaptive")
+    res = run_batch([spec], np.array([[0.1, 0.4]], np.float32), cfg)[0]
+    assert (np.asarray(res["delivered"]) > 0).all()

@@ -336,10 +336,10 @@ def test_progress_callback_three_and_four_arg():
 class _FailingEngine(SweepEngine):
     poison_n: int = 0
 
-    def run_specs(self, specs, rates, single_program=False):
+    def run_specs(self, specs, rates, single_program=False, cfg=None):
         if any(s.n == self.poison_n for s in specs):
             raise RuntimeError("injected failure")
-        return super().run_specs(specs, rates, single_program)
+        return super().run_specs(specs, rates, single_program, cfg=cfg)
 
 
 def test_failed_chunk_logs_metrics_event():

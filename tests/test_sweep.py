@@ -193,3 +193,85 @@ def test_hash_rng_invariant_to_padding():
     d = sim._node_bits(7, 14, jnp.arange(16), 1)
     assert not np.array_equal(np.asarray(a), np.asarray(c))
     assert not np.array_equal(np.asarray(a), np.asarray(d))
+
+
+# ---------------------------------------------------------------------
+# adaptive routing through the batched engine (DESIGN.md §15)
+# ---------------------------------------------------------------------
+
+ACFG = CFG._replace(routing="adaptive")
+
+
+def test_adaptive_batched_bitwise_equals_single_spec(hetero_specs):
+    """Padding invariance holds for the adaptive branch too: the
+    batched program delivers the same counters as each single-spec run."""
+    rates = np.array([0.05, 0.2, 0.5], np.float32)
+    batched = run_batch(hetero_specs, rates, ACFG)
+    for spec, b in zip(hetero_specs, batched):
+        single = run_batch([spec], rates[None, :], ACFG)[0]
+        for k in RAW:
+            np.testing.assert_array_equal(single[k], b[k], err_msg=k)
+
+
+def test_adaptive_fat_pad_invariant(hetero_specs):
+    """Fat-padding every axis (nodes, ports, channels, ring depth) does
+    not change a single adaptive counter: the productive-ports mask's
+    pad region is all-False, so adaptive selection never sees pad
+    lanes."""
+    specs = hetero_specs[:2]
+    rates = np.array([0.1, 0.4], np.float32)
+    tight = run_batch(specs, rates, ACFG)
+    shape = PadShape.of(specs)
+    fat = PadShape(n=shape.n + 7, p=shape.p + 2, c=shape.c + 19,
+                   d=shape.d + 3)
+    padded = run_batch(specs, rates, ACFG, pad_shape=fat)
+    for a, b in zip(tight, padded):
+        for k in RAW:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_static_fat_pad_invariant_with_prod_leaf(hetero_specs):
+    """The new `prod` BatchSpec leaf must not disturb the static path's
+    fat-pad invariance (it is dead code under routing='static')."""
+    specs = hetero_specs[:2]
+    rates = np.array([0.1, 0.4], np.float32)
+    tight = run_batch(specs, rates, CFG)
+    shape = PadShape.of(specs)
+    fat = PadShape(n=shape.n + 5, p=shape.p + 1, c=shape.c + 9,
+                   d=shape.d + 2)
+    padded = run_batch(specs, rates, CFG, pad_shape=fat)
+    for a, b in zip(tight, padded):
+        for k in RAW:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_prod_leaf_padding_contract(hetero_specs):
+    """Stacked productive-ports masks: real region matches each spec's
+    own mask, pad region is all-False."""
+    batch, shape = stack_specs(hetero_specs)
+    for i, spec in enumerate(hetero_specs):
+        pr = batch.prod[i]
+        assert pr.shape == (shape.n, shape.n, shape.p)
+        np.testing.assert_array_equal(
+            pr[:spec.n, :spec.n, :spec.p], spec.prod)
+        assert not pr[spec.n:].any()
+        assert not pr[:, spec.n:].any()
+        assert not pr[:, :, spec.p:].any()
+
+
+def test_engine_cfg_override_routes_adaptively(hetero_specs):
+    """`run_specs(..., cfg=...)` runs the override config; the engine's
+    own default stays intact (per-scenario routing, DESIGN.md §15)."""
+    specs = hetero_specs[:2]
+    rates = np.array([0.1, 0.4], np.float32)
+    eng = SweepEngine(cfg=CFG)
+    via_engine = eng.run_specs(specs, rates, cfg=ACFG)
+    direct = run_batch(specs, rates, ACFG)
+    for a, b in zip(direct, via_engine):
+        for k in RAW:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    # and without the override the engine still runs static
+    static = eng.run_specs(specs, rates)
+    single = run_batch([specs[0]], rates[None, :], CFG)[0]
+    np.testing.assert_array_equal(static[0]["delivered"],
+                                  single["delivered"])
