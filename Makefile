@@ -5,7 +5,10 @@ PY := PYTHONPATH=src python
 .PHONY: test lint-analysis bench bench-smoke bench-sim bench-workloads \
         bench-experiments bench-faults bench-faults-full bench-synth \
         bench-synth-full bench-obs bench-obs-full bench-adaptive \
-        bench-adaptive-full examples
+        bench-adaptive-full bench-compare bench-baselines examples
+
+#: benches with a committed baseline under benchmarks/baselines/
+BENCH_NAMES := sweep workload experiments fault synth obs adaptive
 
 test:                 ## tier-1 verify
 	$(PY) -m pytest -x -q
@@ -53,6 +56,19 @@ bench-adaptive:       ## static-vs-adaptive routing smoke, < 60 s, CSV for CI
 
 bench-adaptive-full:  ## full static-vs-adaptive gain grid (Table III, N=36)
 	$(PY) -m benchmarks.adaptive_bench
+
+bench-compare:        ## diff fresh results/BENCH_*.json vs committed baselines
+	@for n in $(BENCH_NAMES); do \
+	  if [ -f results/BENCH_$$n.json ]; then \
+	    $(PY) -m repro.obs.bench compare \
+	      benchmarks/baselines/BENCH_$$n.json results/BENCH_$$n.json \
+	      --warn-only || exit $$?; \
+	  fi; \
+	done
+	@echo "(gate hard with: python -m repro.obs.bench compare OLD NEW --fail-over 25)"
+
+bench-baselines:      ## promote fresh smoke BENCH files to committed baselines
+	cp results/BENCH_*.json benchmarks/baselines/
 
 examples:             ## quickstart examples (experiment-API smoke)
 	$(PY) examples/quickstart.py

@@ -33,6 +33,7 @@ from repro.configs import get_config
 from repro.core.simulator import SimConfig
 
 from .common import RESULTS_DIR, write_csv
+from .harness import BenchRun
 
 SUBSTRATES = ("organic", "glass")
 ROUTINGS = ("static", "adaptive")
@@ -112,6 +113,29 @@ def bench_adaptive(params: dict, arch: str = "qwen3_1_7b") -> list[dict]:
           f"{len(traffics)} workloads) in {wall:.1f}s; "
           f"engine stats: {engine.stats}")
     _print_headline(rows)
+
+    # BENCH json: warm observed pass for spans + XLA profiles; the gain
+    # metrics guard the adaptive-routing win itself against regressions
+    run = BenchRun("adaptive", mode="smoke" if params is SMOKE else "full")
+    frame2 = run.observed_pass(lambda: X.run(exp, engine=engine))
+    split = run.device_host_split()
+    pf = [r["pad_fill"]["state"] for r in frame2.results if r is not None]
+    hd = [r["adaptive_gain"] for r in rows
+          if r["workload"] == "hotspot_drift"
+          and isinstance(r["adaptive_gain"], float)]
+    run.metrics(dict(cold_wall_s=round(wall, 4),
+                     warm_device_s=split["device_s"],
+                     warm_stack_s=split["stack_s"]))
+    run.metric("cells", len(rows), direction="higher")
+    run.metric("pad_fill_state", round(float(np.mean(pf)), 4)
+               if pf else None, direction="higher")
+    if hd:
+        run.metric("drift_gain_mean", round(float(np.mean(hd)), 4),
+                   direction="higher")
+        run.metric("drift_gain_max", round(float(max(hd)), 4),
+                   direction="higher")
+    run.extra(workloads=list(params["workloads"]), n=params["n"])
+    run.finish()
     return rows
 
 

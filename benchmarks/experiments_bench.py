@@ -66,6 +66,16 @@ def bench(params: dict, chunk_size: int | None = None) -> dict:
                engine_stats=dict(engine.stats))
     for k, v in out.items():
         print(f"{k}: {v}")
+
+    from .harness import BenchRun
+    run = BenchRun("experiments",
+                   mode="smoke" if len(exp) <= 40 else "full")
+    run.metrics(dict(plan_s=out["plan_s"], execute_s=out["execute_s"]))
+    run.metric("scenarios", len(exp), direction="higher")
+    run.metric("buckets", len(pl.buckets))
+    run.metric("compiles", engine.stats["compiles"])
+    run.extra(engine_stats=dict(engine.stats))
+    run.finish()
     return out
 
 

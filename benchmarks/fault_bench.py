@@ -141,6 +141,14 @@ def bench_faults(params: dict, arch: str = "qwen3_1_7b") -> list[dict]:
           f"({len(frame.ok())} ok) in {wall:.1f}s; "
           f"engine stats: {engine.stats}")
     _print_headline(rows, params["ks"])
+
+    from .harness import BenchRun
+    run = BenchRun("fault", mode="smoke" if params is SMOKE else "full")
+    run.metrics(dict(wall_s=round(wall, 4)))
+    run.metric("scenarios", len(scenarios), direction="higher")
+    run.metric("ok_rows", len(frame.ok()), direction="higher")
+    run.metric("compiles", engine.stats["compiles"])
+    run.finish()
     return rows
 
 

@@ -1,0 +1,117 @@
+"""Bench-facing wrapper over `repro.obs.bench` (DESIGN.md §16).
+
+Every benchmark module builds a `BenchRun`, records its scalar metrics
+(and optionally a traced/profiled extra pass), and calls `finish()` —
+which assembles the versioned BENCH document (machine/JAX metadata,
+span summaries, XLA profiles) and writes `results/BENCH_<name>.json`.
+The committed baselines under `benchmarks/baselines/` are compared
+against these in CI via `python -m repro.obs.bench compare`.
+
+Conventions:
+
+  * wall-clock metrics end in `_s` and are lower-is-better (the
+    default); ratios like `warm_speedup` pass `direction="higher"`;
+  * the traced/profiled pass happens OUTSIDE every timed section —
+    profiling recompiles the executable (see `repro.obs.profile`) and
+    tracing adds span bookkeeping, so neither may touch a timed region.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+from repro.obs import bench as B
+from repro.obs.profile import (clear_profiles, disable_profiling,
+                               enable_profiling, get_profiles)
+from repro.obs.trace import (clear_trace, disable_tracing, enable_tracing,
+                             get_spans, span_summary, tracing_enabled)
+
+from .common import RESULTS_DIR
+
+
+class BenchRun:
+    """Collects one benchmark's metrics and writes its BENCH json."""
+
+    def __init__(self, name: str, mode: str = "full",
+                 results_dir: str = RESULTS_DIR):
+        self.name = name
+        self.mode = mode
+        self.results_dir = results_dir
+        self._metrics: dict = {}
+        self._directions: dict = {}
+        self._spans: dict = {}
+        self._profiles: list = []
+        self._extra: dict = {}
+
+    # ---- metrics -------------------------------------------------------
+    def metric(self, name: str, value, direction: str = "lower"
+               ) -> "BenchRun":
+        self._metrics[name] = value
+        if direction != "lower":
+            self._directions[name] = direction
+        return self
+
+    def metrics(self, values: dict, direction: str = "lower"
+                ) -> "BenchRun":
+        for k, v in values.items():
+            self.metric(k, v, direction)
+        return self
+
+    @contextmanager
+    def timed(self, name: str, direction: str = "lower"):
+        """`with run.timed("warm"):` records `warm_s` wall-clock."""
+        t0 = time.perf_counter()
+        yield
+        self.metric(f"{name}_s", round(time.perf_counter() - t0, 4),
+                    direction)
+
+    def extra(self, **fields) -> "BenchRun":
+        """Attach non-scalar payloads (grids, csv rows, notes)."""
+        self._extra.update(fields)
+        return self
+
+    # ---- traced / profiled extra pass ---------------------------------
+    def observed_pass(self, fn, *, profile: bool = True,
+                      trace: bool = True):
+        """Run `fn()` once with tracing/profiling enabled and absorb the
+        span summary and XLA profiles into this run.  Call it AFTER the
+        timed passes: the profile capture compiles a second executable
+        and the spans add bookkeeping, so this pass is never timed."""
+        was_tracing = tracing_enabled()
+        if trace:
+            clear_trace()
+            enable_tracing()
+        if profile:
+            clear_profiles()
+            enable_profiling()
+        try:
+            out = fn()
+        finally:
+            if profile:
+                disable_profiling()
+                self._profiles = get_profiles()
+            if trace:
+                self._spans = span_summary(get_spans())
+                if not was_tracing:
+                    disable_tracing()
+        return out
+
+    def device_host_split(self, total_key: str = "") -> dict:
+        """Device-vs-host wall-clock split from the observed pass's
+        spans: device time is the `sim.wait` total (the
+        `block_until_ready` tail), host time is everything else."""
+        device = self._spans.get("sim.wait", {}).get("total_s", 0.0)
+        stack = self._spans.get("sim.stack", {}).get("total_s", 0.0)
+        dispatch = self._spans.get("sim.dispatch", {}).get("total_s", 0.0)
+        return dict(device_s=round(device, 4),
+                    stack_s=round(stack, 4),
+                    dispatch_s=round(dispatch, 4))
+
+    # ---- emit ----------------------------------------------------------
+    def finish(self) -> dict:
+        doc = B.bench_doc(self.name, self._metrics,
+                          directions=self._directions, mode=self.mode,
+                          spans=self._spans, profiles=self._profiles,
+                          extra=self._extra)
+        B.write_bench(doc, self.results_dir)
+        return doc

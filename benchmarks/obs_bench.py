@@ -38,13 +38,15 @@ import repro.experiments as X
 from repro.core import topology as T
 from repro.core.simulator import SimConfig
 from repro.faults import FaultError, sample_faults
+import repro.workloads as W
 from repro.obs import metrics
-from repro.obs.report import write_link_reports
+from repro.obs.report import write_link_reports, write_window_reports
 from repro.obs.trace import (clear_trace, disable_tracing, enable_tracing,
                              get_spans, save_chrome_trace, trace)
 from repro.sweep.engine import SweepEngine
 
 from .common import RESULTS_DIR
+from .harness import BenchRun
 
 SUBSTRATES = ("organic", "glass")
 
@@ -171,6 +173,55 @@ def bench_obs(params: dict) -> None:
 
     _print_headline(summary)
     _fault_companion(params, cfg)
+    drift_gini = _window_companion(params, cfg)
+
+    # BENCH json (DESIGN.md §16): one extra warm pass with profiling on
+    # captures the XLA cost/memory analysis; pad_fill rides on results
+    run = BenchRun("obs", mode="smoke" if params is SMOKE else "full")
+    frame3 = run.observed_pass(lambda: X.run(exp, engine=engine))
+    pf = [r["pad_fill"]["state"] for r in frame3.results if r is not None]
+    run.metrics(dict(cold_wall_s=round(cold_wall, 4),
+                     warm_wall_s=round(warm_wall, 4),
+                     cold_dispatch_s=round(cold["dispatch_cold"] / 1e3, 4),
+                     cold_wait_s=round(cold["wait"] / 1e3, 4),
+                     warm_wait_s=round(warm["wait"] / 1e3, 4)))
+    run.metric("conservation_cells", checked, direction="higher")
+    run.metric("pad_fill_state", round(float(np.mean(pf)), 4),
+               direction="higher")
+    if drift_gini is not None:
+        run.metric("drift_gini_spread", drift_gini, direction="higher")
+    run.extra(scenarios=len(scenarios), n=params["n"])
+    run.finish()
+
+
+def _window_companion(params: dict, cfg: SimConfig) -> float | None:
+    """Time-windowed telemetry on a drifting-hotspot workload: the
+    per-window heatmap/summary CSVs that make hotspot migration visible
+    (DESIGN.md §16).  Returns the spread of per-window Gini (max - min)
+    at the plateau rate — ~0 under steady uniform load, clearly positive
+    while a hotspot drifts."""
+    n = params["n"]
+    wcfg = cfg._replace(telemetry_windows=6)
+    wl = W.Workload("hotspot_drift",
+                    lambda topo: W.hotspot_drift(topo, n_phases=6,
+                                                 dwell=200))
+    exp = X.Experiment(
+        [X.Scenario("folded_hexa_torus", n, traffic=wl,
+                    rates=X.SaturationGrid(params["n_rates"]))],
+        cfg=wcfg, name="window_heatmap")
+    frame = X.run(exp, engine=SweepEngine(cfg=wcfg))
+    rows = frame.all_window_rows()
+    if not rows:
+        print("[obs_bench] window companion produced no rows")
+        return None
+    summary = write_window_reports(
+        os.path.join(RESULTS_DIR, "window_heatmap.csv"),
+        os.path.join(RESULTS_DIR, "window_summary.csv"), rows)
+    ginis = [s["gini"] for s in summary]
+    spread = round(max(ginis) - min(ginis), 4)
+    print(f"[obs_bench] windowed drift companion: {len(summary)} windows, "
+          f"gini {min(ginis):.3f}..{max(ginis):.3f} (spread {spread})")
+    return spread
 
 
 def _print_headline(summary: list[dict]) -> None:

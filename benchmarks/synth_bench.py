@@ -68,6 +68,17 @@ def main() -> None:
     fht5 = res.on_front("folded_hexa_torus", eps=0.05)
     print(f"[synth] folded_hexa_torus on front: {fht} "
           f"(within 5%: {fht5})")
+    from .harness import BenchRun
+    run = BenchRun("synth", mode="smoke" if args.smoke else "full")
+    run.metrics(dict(wall_s=round(wall, 4)))
+    run.metric("generated", s["n_generated"], direction="higher")
+    run.metric("feasible", s["n_feasible"], direction="higher")
+    run.metric("simulated", s["n_simulated"])
+    run.metric("prefilter_ratio", round(res.prefilter_ratio, 2),
+               direction="higher")
+    run.metric("front_size", len(front), direction="higher")
+    run.finish()
+
     if not args.smoke:
         assert fht5, "FHT fell off its own Pareto front — regression"
         assert res.prefilter_ratio >= 5.0, \

@@ -108,6 +108,17 @@ def bench_workloads(params: dict, arch: str = "qwen3_1_7b") -> list[dict]:
     print(f"[workload_bench] {n_cells} cells x {len(workloads)} "
           f"workloads in {wall:.1f}s; engine stats: {engine.stats}")
     _print_headline(rows)
+
+    from .harness import BenchRun
+    run = BenchRun("workload", mode="smoke" if params is SMOKE else "full")
+    pf = [r["pad_fill"]["phase"] for r in frame.results if r is not None]
+    run.metrics(dict(wall_s=round(wall, 4)))
+    run.metric("cells", n_cells, direction="higher")
+    run.metric("rows", len(rows), direction="higher")
+    run.metric("pad_fill_phase", round(float(np.mean(pf)), 4)
+               if pf else None, direction="higher")
+    run.metric("compiles", engine.stats["compiles"])
+    run.finish()
     return rows
 
 

@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.profile import profiling_enabled
 from repro.obs.trace import trace as _span
 from repro.obs.trace import tracing_enabled as _tracing
 
@@ -91,6 +92,17 @@ TELEMETRY_KEYS = ("link_busy", "link_stall", "link_occ_sum", "link_util",
                   "link_occ_escape", "link_occ_adaptive",
                   "inj_node", "eject_node", "lat_hist")
 
+#: additional per-spec result keys when `SimConfig(telemetry_windows=W)`
+#: bins the flight recorder over time (DESIGN.md §16).  Every counter
+#: key gains a window axis W right after the rate axis; the per-window
+#: tensors sum over W to the aggregate counters EXACTLY (same masks,
+#: same int adds, each measured cycle lands in exactly one window) and
+#: are padding-invariant by the same sacrificial-slot discipline.
+#: `window_cycles` [W] is the host-side normalizer (cycles per window).
+TELEMETRY_WINDOW_KEYS = ("link_busy_w", "link_stall_w", "link_occ_w",
+                         "link_util_w", "inj_node_w", "eject_node_w",
+                         "window_cycles")
+
 #: rate-grid headroom above the static analytic bound (DESIGN.md §15):
 #: static sweeps plateau below the analytic estimate, adaptive sweeps
 #: can exceed it (routing around congestion), so their grid must extend
@@ -111,6 +123,10 @@ class SimConfig(NamedTuple):
     routing: str = "static"  # "static" | "adaptive" (DESIGN.md §15);
     #                          "static" is bitwise identical to the
     #                          pre-adaptive simulator
+    telemetry_windows: int = 0  # W > 0 bins the flight recorder into W
+    #                          time windows over the measured cycles
+    #                          (DESIGN.md §16); requires telemetry=True;
+    #                          0 leaves the compiled program unchanged
 
 
 class SimState(NamedTuple):
@@ -141,6 +157,14 @@ class SimState(NamedTuple):
     tel_inj: jnp.ndarray | None = None        # [N] accepted injections
     tel_eject: jnp.ndarray | None = None      # [N] ejections
     tel_hist: jnp.ndarray | None = None       # [LAT_HIST_BINS] latency
+    # windowed flight-recorder counters (telemetry_windows=W > 0 only;
+    # DESIGN.md §16).  Same sacrificial-row discipline, one extra
+    # leading window axis; each sums over W to its aggregate above.
+    tel_busy_w: jnp.ndarray | None = None     # [W, C+1]
+    tel_stall_w: jnp.ndarray | None = None    # [W, C+1]
+    tel_occ_w: jnp.ndarray | None = None      # [W, C+1, V]
+    tel_inj_w: jnp.ndarray | None = None      # [W, N]
+    tel_eject_w: jnp.ndarray | None = None    # [W, N]
 
 
 @dataclasses.dataclass
@@ -268,6 +292,21 @@ def make_sched_spec(phases) -> SchedSpec:
         gain_on=np.asarray(gains, np.float32), start=start, end=end,
         on=np.asarray(ons, np.int32), period=np.asarray(periods, np.int32),
         total=int(end[-1]))
+
+
+def telemetry_window_cycles(cfg: SimConfig) -> np.ndarray:
+    """[W] measured cycles falling in each telemetry window — the
+    normalizer for per-window utilization.  Mirrors the in-scan window
+    pointer exactly: cycle t (warmup <= t < cycles) lands in window
+    ((t - warmup) * W) // meas, so windows partition the measured
+    cycles (sum == cycles - warmup) and differ by at most one cycle."""
+    w = cfg.telemetry_windows
+    if w <= 0:
+        raise ValueError("telemetry_windows must be > 0 for a window "
+                         "grid")
+    meas = cfg.cycles - cfg.warmup
+    return np.bincount((np.arange(meas, dtype=np.int64) * w) // meas,
+                       minlength=w).astype(np.int64)
 
 
 def phase_measured_cycles(sched: SchedSpec, cfg: SimConfig) -> np.ndarray:
@@ -474,6 +513,13 @@ def _init_state(nm: int, pm: int, cm: int, dm: int, cfg: SimConfig,
                tel_eject=z((nm,), jnp.int32),
                tel_hist=z((LAT_HIST_BINS,), jnp.int32)) \
         if cfg.telemetry else {}
+    W = cfg.telemetry_windows
+    if cfg.telemetry and W > 0:
+        tel.update(tel_busy_w=z((W, cm + 1), jnp.int32),
+                   tel_stall_w=z((W, cm + 1), jnp.int32),
+                   tel_occ_w=z((W, cm + 1, V), jnp.int32),
+                   tel_inj_w=z((W, nm), jnp.int32),
+                   tel_eject_w=z((W, nm), jnp.int32))
     return SimState(
         **ph, **tel,
         buf_dst=jnp.full((nm, PI, V, B + 1), -1, jnp.int32),
@@ -519,6 +565,18 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
         raise ValueError(
             f"adaptive routing needs n_vcs >= 2 (VC 0 escape + at least "
             f"one adaptive VC), got n_vcs={V}")
+    W = cfg.telemetry_windows
+    if W < 0:
+        raise ValueError(f"telemetry_windows must be >= 0, got {W}")
+    if W and not cfg.telemetry:
+        raise ValueError(
+            "telemetry_windows requires telemetry=True — the windowed "
+            "counters bin the flight recorder, they cannot replace it")
+    meas = cfg.cycles - cfg.warmup
+    if W > meas:
+        raise ValueError(
+            f"telemetry_windows={W} exceeds the measured window "
+            f"({meas} cycles) — some windows would be empty")
     alloc_fn = _alloc_pallas if alloc_impl == "pallas" else _alloc_jnp
     nn = jnp.arange(N)[:, None]
     pp = jnp.arange(PI)[None, :]
@@ -687,6 +745,25 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
             tel_upd = dict(tel_busy=tel_busy, tel_stall=tel_stall,
                            tel_occ=tel_occ, tel_inj=tel_inj,
                            tel_eject=tel_eject, tel_hist=tel_hist)
+            if W:
+                # time-windowed bins (DESIGN.md §16): the SAME masks and
+                # weights as the aggregates above, scattered once more
+                # with a leading window index — so summing the window
+                # axis reconciles to the aggregates bitwise (int adds,
+                # every measured cycle lands in exactly one window;
+                # pre-warmup cycles clip to window 0 with weight 0).
+                w = jnp.clip(((t - cfg.warmup) * W) // meas, 0, W - 1)
+                tel_upd.update(
+                    tel_busy_w=state.tel_busy_w.at[w, oc_w].add(
+                        m32 * traverse.astype(jnp.int32)),
+                    tel_stall_w=state.tel_stall_w.at[w, st_ch_w].add(
+                        m32 * starved.astype(jnp.int32)),
+                    tel_occ_w=state.tel_occ_w.at[w, jnp.arange(C)].add(
+                        m32 * occ),
+                    tel_inj_w=state.tel_inj_w.at[w].add(
+                        m32 * do_inj.astype(jnp.int32)),
+                    tel_eject_w=state.tel_eject_w.at[w].add(
+                        m32 * jnp.sum(eject.astype(jnp.int32), axis=1)))
 
         return SimState(
             buf_dst=buf_dst, buf_t=buf_t, head=head, cnt=cnt,
@@ -710,6 +787,10 @@ def _make_batch_runner(nm: int, pm: int, cm: int, dm: int,
         if cfg.telemetry:
             out += (state.tel_busy, state.tel_stall, state.tel_occ,
                     state.tel_inj, state.tel_eject, state.tel_hist)
+            if W:
+                out += (state.tel_busy_w, state.tel_stall_w,
+                        state.tel_occ_w, state.tel_inj_w,
+                        state.tel_eject_w)
         return out
 
     if kmax:
@@ -781,6 +862,26 @@ def runner_cache_info() -> dict:
         **_RUNNER_CACHE_STATS)
 
 
+def _pad_fill(specs, shape, schedules, kmax) -> list[dict]:
+    """Live-work fraction of a padded batch, one dict per spec.
+
+    `state` is the live fraction of the router-state grid the compiled
+    program iterates (n*(p+1) of N*(P+1) cells — +1 for the ejection
+    lane); `chan`/`depth` are the live channel-row and ring-depth
+    fractions; `phase` is live schedule phases over k_pad (1.0 on the
+    static path).  1 - fill is pad waste: device work spent keeping
+    heterogeneous specs in one executable (DESIGN.md §16).
+    """
+    fills = []
+    for i, spec in enumerate(specs):
+        fills.append(dict(
+            state=(spec.n * (spec.p + 1)) / (shape.n * (shape.p + 1)),
+            chan=spec.c / shape.c,
+            depth=spec.d / shape.d,
+            phase=(schedules[i].k / kmax) if schedules is not None else 1.0))
+    return fills
+
+
 def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
               pad_shape=None, schedules=None, k_pad=None) -> list[dict]:
     """Run many SimSpecs x injection rates in one batched jitted program.
@@ -808,6 +909,22 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
     LAT_HIST_BINS].  Sacrificial and padded lanes are sliced away, so
     telemetry is padding-invariant like every other counter; with
     telemetry off the compiled program is unchanged.
+
+    cfg.telemetry_windows=W (> 0, with telemetry on) additionally bins
+    the busy/stall/occupancy/inject/eject counters into W time windows
+    over the measured cycles (`TELEMETRY_WINDOW_KEYS`, DESIGN.md §16):
+    `link_busy_w`/`link_stall_w` [R, W, c], `link_occ_w` [R, W, c, V],
+    `inj_node_w`/`eject_node_w` [R, W, n], derived `link_util_w`
+    (busy_w / that window's cycle count) and the `window_cycles` [W]
+    normalizer.  Each windowed tensor sums over W to its aggregate
+    counter EXACTLY, and the same sacrificial-slot discipline keeps the
+    windows padding-invariant.
+
+    Every result dict also carries `pad_fill` — the live-work fraction
+    of this padded batch (DESIGN.md §16): `state` = live router-state
+    cells / padded cells (n*(p+1) / N*(P+1)), `chan` = c/C, `depth` =
+    d/D, `phase` = k/k_pad (1.0 static) — the pad-waste numbers the
+    warm-path investigation reads off `ResultFrame` rows.
     """
     from repro.sweep.padding import stack_schedules, stack_specs
     with _span("sim.stack", cat="sim", specs=len(specs)):
@@ -819,6 +936,7 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
     if rates.shape[0] != s:
         raise ValueError(f"rates rows {rates.shape[0]} != specs {s}")
     if schedules is None:
+        kmax = 0
         runner = get_batch_runner(shape.n, shape.p, shape.c, shape.d, cfg,
                                   resolve_alloc(cfg.alloc))
         args = (batch, jnp.asarray(rates))
@@ -833,6 +951,11 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
         runner = get_batch_runner(shape.n, shape.p, shape.c, shape.d, cfg,
                                   resolve_alloc(cfg.alloc), kmax)
         args = (batch, jnp.asarray(rates), sbatch)
+    fills = _pad_fill(specs, shape, schedules, kmax)
+    if profiling_enabled():
+        from repro.obs.profile import record_runner_profile
+        record_runner_profile(shape, cfg, resolve_alloc(cfg.alloc), kmax,
+                              runner, args)
     # dispatch vs wait split (DESIGN.md §13): the dispatch span covers
     # trace+compile on a cold executable (jit compiles synchronously at
     # dispatch) plus argument transfer; the wait span is the device
@@ -844,7 +967,9 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
         raw = runner(*args)
         if _tracing():
             d = runner._cache_size() - variants
-            sp.set(cold=d > 0, compiled_variants=d)
+            sp.set(cold=d > 0, compiled_variants=d,
+                   **{f"fill_{k}": round(float(np.mean(
+                       [f[k] for f in fills])), 4) for k in fills[0]})
     with _span("sim.wait", cat="sim", specs=s):
         raw = jax.block_until_ready(raw)
     delivered = np.asarray(raw[0])             # [S, R]
@@ -853,9 +978,14 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
     lat_sum = np.asarray(raw[3]).astype(np.int64).sum(axis=2)  # [S, R]
     meas = cfg.cycles - cfg.warmup
     tel = None
+    telw = None
+    win_cycles = None
     if cfg.telemetry:
         off = 8 if schedules is not None else 4
         tel = tuple(np.asarray(raw[off + j]) for j in range(6))
+        if cfg.telemetry_windows:
+            telw = tuple(np.asarray(raw[off + 6 + j]) for j in range(5))
+            win_cycles = telemetry_window_cycles(cfg)
     out = []
     for i, spec in enumerate(specs):
         norm = spec.n * meas
@@ -866,7 +996,8 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
             throughput=delivered[i] / norm,
             latency=lat_sum[i] / np.maximum(delivered[i], 1),
             offered=offered[i] / norm,
-            accepted=accepted[i] / norm)
+            accepted=accepted[i] / norm,
+            pad_fill=fills[i])
         if schedules is not None:
             sched = schedules[i]
             k = sched.k
@@ -898,6 +1029,22 @@ def run_batch(specs, rates, cfg: SimConfig = SimConfig(), *,
                 link_util=busy / float(meas),
                 inj_node=t_inj[i, :, :n], eject_node=t_ej[i, :, :n],
                 lat_hist=t_hist[i])
+            if telw is not None:
+                # windowed flight recorder (DESIGN.md §16): same
+                # sacrificial/pad-lane slicing as the aggregates, plus
+                # the per-window cycle-count normalizer for utilisation
+                w_busy, w_stall, w_occ, w_inj, w_ej = telw
+                busy_w = w_busy[i, :, :, :c]               # [R, W, c]
+                occ_w = w_occ[i, :, :, :c, :]              # [R, W, c, V]
+                res.update(
+                    link_busy_w=busy_w,
+                    link_stall_w=w_stall[i, :, :, :c],
+                    link_occ_w=occ_w,
+                    link_util_w=busy_w / np.maximum(
+                        win_cycles, 1).astype(np.float64)[None, :, None],
+                    inj_node_w=w_inj[i, :, :, :n],
+                    eject_node_w=w_ej[i, :, :, :n],
+                    window_cycles=win_cycles)
         out.append(res)
     return out
 

@@ -33,7 +33,9 @@ COLUMNS = (
     "analytic_saturation", "sim_saturation", "rel_throughput",
     "abs_throughput_gbps", "latency_ns", "avg_hops", "chiplet_area_mm2",
     "phy_area_frac", "power_w", "max_link_mm", "radix",
-    "link_util_p95", "link_util_max", "link_gini", "error", "diag_code",
+    "link_util_p95", "link_util_max", "link_gini",
+    "pad_fill_state", "pad_fill_chan", "pad_fill_phase",
+    "error", "diag_code",
 )
 
 
@@ -70,6 +72,11 @@ def scenario_row(exp: Experiment, ps: PlannedScenario,
         t_r = float(res["throughput"][k])
         lat = float(res["latency"][k])
         row["sim_saturation"] = t_r
+        if "pad_fill" in res:            # pad-waste accounting (§16)
+            pf = res["pad_fill"]
+            row.update(pad_fill_state=round(float(pf["state"]), 4),
+                       pad_fill_chan=round(float(pf["chan"]), 4),
+                       pad_fill_phase=round(float(pf["phase"]), 4))
         if "link_util" in res:           # flight recorder was on
             from repro.obs.report import gini
             util = np.asarray(res["link_util"][k], np.float64)
@@ -193,6 +200,37 @@ class ResultFrame:
         for k in extra:
             seen.setdefault(k, None)
         xio.write_csv(path, rows, columns=list(LINK_COLUMNS) + list(seen))
+
+    # ---- windowed-telemetry views (DESIGN.md §16) ---------------------
+    def window_rows(self, i: int, rate_index: int | None = None) -> list:
+        """Tidy per-(time-window, link) rows for scenario i (requires
+        `SimConfig(telemetry=True, telemetry_windows=W)`)."""
+        from repro.obs.flight import window_rows as _rows
+        ps, res = self.planned[i], self.results[i]
+        if ps is None or res is None:
+            return []
+        return _rows(ps, res, experiment=self.experiment.name,
+                     rate_index=rate_index)
+
+    def all_window_rows(self, rate_index: int | None = None) -> list:
+        """Per-(window, link) rows for every ok scenario, in order."""
+        out: list = []
+        for i in range(len(self.rows)):
+            out.extend(self.window_rows(i, rate_index=rate_index))
+        return out
+
+    def to_window_csv(self, path: str,
+                      rate_index: int | None = None) -> None:
+        """Write the time-heatmap CSV (per window x link) for this
+        frame — the artifact that shows hotspot drift over time."""
+        from repro.obs.flight import WINDOW_COLUMNS
+        rows = self.all_window_rows(rate_index=rate_index)
+        extra = [k for r in rows for k in r if k not in WINDOW_COLUMNS]
+        seen: dict = {}
+        for k in extra:
+            seen.setdefault(k, None)
+        xio.write_csv(path, rows,
+                      columns=list(WINDOW_COLUMNS) + list(seen))
 
     # ---- versioned writers --------------------------------------------
     def to_csv(self, path: str, include_failures: bool = False) -> None:

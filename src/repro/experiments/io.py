@@ -35,7 +35,14 @@ import numpy as np
 #: v5: adaptive routing (DESIGN.md §15) — tidy rows gain a `routing`
 #: column (effective mode per scenario), per-link heatmap rows gain
 #: `occ_escape` / `occ_adaptive` (escape-vs-adaptive VC-class occupancy)
-SCHEMA_VERSION = 5
+#: v6: performance observability (DESIGN.md §16) — tidy rows gain
+#: pad-waste columns (`pad_fill_state` / `pad_fill_chan` /
+#: `pad_fill_phase`), windowed-telemetry time-heatmap artifacts
+#: (obs.flight.WINDOW_COLUMNS, obs.report.WINDOW_SUMMARY_COLUMNS) share
+#: this stamp, and sweep_speedup.csv splits warm host vs device time.
+#: (BENCH_<name>.json files carry their own `bench_schema_version` —
+#: see repro.obs.bench.)
+SCHEMA_VERSION = 6
 
 
 def stable_columns(rows: Sequence[dict],

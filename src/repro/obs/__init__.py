@@ -10,9 +10,22 @@ Two halves, both off by default and bitwise-inert when off:
     the batched simulator carry per-link/per-port counter tensors
     through the scan; `obs.flight` turns them into tidy per-link rows
     and `obs.report` into link-load heatmap/summary CSVs.
+
+PR 10 (DESIGN.md §16) adds the performance half: time-windowed
+telemetry (`SimConfig(telemetry_windows=W)` -> `window_rows` /
+`write_window_reports` time-heatmaps), opt-in XLA cost/memory
+profiling per compiled runner (`obs.profile`), and the structured
+benchmark harness + regression gate (`obs.bench`,
+`python -m repro.obs.bench compare`).
 """
 from .trace import (Span, clear_trace, disable_tracing, enable_tracing,  # noqa
-                    get_spans, save_chrome_trace, trace, tracing_enabled)
+                    get_spans, save_chrome_trace, span_summary, trace,
+                    tracing_enabled)
 from .metrics import (MetricsRegistry, cache_counters, metrics)  # noqa
-from .flight import link_rows, LINK_COLUMNS  # noqa
-from .report import gini, link_load_summary, write_link_reports  # noqa
+from .flight import link_rows, window_rows, LINK_COLUMNS, WINDOW_COLUMNS  # noqa
+from .report import (gini, link_load_summary, window_summary,  # noqa
+                     write_link_reports, write_window_reports)
+from .profile import (ProfileRegistry, clear_profiles, disable_profiling,  # noqa
+                      enable_profiling, get_profiles, profiling_enabled)
+from .bench import (BENCH_SCHEMA_VERSION, bench_doc, compare,  # noqa
+                    load_bench, write_bench)

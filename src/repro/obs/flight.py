@@ -131,3 +131,63 @@ def link_rows(planned, res: dict, meas: int, *, experiment: str = "",
                             busy=0, util=0.0, stalls=0, occ_mean=0.0,
                             occ_escape=0.0, occ_adaptive=0.0))
     return rows
+
+
+#: stable tidy-row column order for per-(window, link) rows
+WINDOW_COLUMNS = (
+    "experiment", "topology", "n", "substrate", "traffic", "faults",
+    "rate", "window", "t_start", "t_end", "cycles", "channel", "src",
+    "dst", "busy", "util", "stalls", "occ_mean", "occ_escape",
+    "occ_adaptive",
+)
+
+
+def window_rows(planned, res: dict, *, experiment: str = "",
+                rate_index: int | None = None) -> list[dict]:
+    """Tidy per-(time-window, link) rows for one executed scenario.
+
+    Same duck-typed inputs as `link_rows`, but the result must carry
+    the windowed counters (`SimConfig(telemetry_windows=W)`,
+    DESIGN.md §16).  One row per (window, directed channel); `t_start`/
+    `t_end` are measured-window cycle offsets (warmup excluded), so a
+    drift schedule's hotspot migration reads directly off consecutive
+    windows of the same channel.  Utilisation and occupancy normalize
+    by each window's own cycle count — windows need not divide the
+    measured span evenly.
+    """
+    if "link_busy_w" not in res:
+        raise ValueError(
+            "result carries no windowed telemetry — run with "
+            "SimConfig(telemetry=True, telemetry_windows=W)")
+    s = planned.scenario
+    routing = planned.routing
+    k = int(np.argmax(res["throughput"])) if rate_index is None \
+        else int(rate_index)
+    rate = float(res["rate"][k])
+    busy = np.asarray(res["link_busy_w"][k])        # [W, c]
+    stall = np.asarray(res["link_stall_w"][k])      # [W, c]
+    occ = np.asarray(res["link_occ_w"][k])          # [W, c, V]
+    wc = np.asarray(res["window_cycles"])           # [W]
+    edges = np.concatenate([[0], np.cumsum(wc)])
+    tags = dict(s.tags)
+    rows = []
+    for w in range(len(wc)):
+        cyc = float(max(int(wc[w]), 1))
+        for c in range(busy.shape[1]):
+            r = dict.fromkeys(WINDOW_COLUMNS)
+            r.update(experiment=experiment, topology=s.topology_name,
+                     n=s.n, substrate=s.resolved_substrate,
+                     traffic=s.traffic_name, faults=s.fault_name,
+                     rate=rate, window=w, t_start=int(edges[w]),
+                     t_end=int(edges[w + 1]), cycles=int(wc[w]),
+                     channel=c, src=int(routing.ch_src[c]),
+                     dst=int(routing.ch_dst[c]), busy=int(busy[w, c]),
+                     util=round(float(busy[w, c]) / cyc, 6),
+                     stalls=int(stall[w, c]),
+                     occ_mean=round(float(occ[w, c].sum()) / cyc, 4),
+                     occ_escape=round(float(occ[w, c, 0]) / cyc, 4),
+                     occ_adaptive=round(
+                         float(occ[w, c, 1:].sum()) / cyc, 4))
+            r.update(tags)
+            rows.append(r)
+    return rows

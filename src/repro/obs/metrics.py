@@ -38,6 +38,8 @@ class MetricsRegistry:
         self._observations: dict[str, dict] = {}
         self._events: list[dict] = []
         self._sink: str | None = None
+        self._buffered = False
+        self._pending: list[str] = []
 
     # ---- counters ------------------------------------------------------
     def inc(self, name: str, value: float = 1) -> None:
@@ -61,23 +63,57 @@ class MetricsRegistry:
             o["max"] = max(o["max"], value)
 
     # ---- events --------------------------------------------------------
-    def set_sink(self, path: str | None) -> None:
-        """Mirror every subsequent event to `path` as one JSON line."""
+    def set_sink(self, path: str | None, *, buffered: bool = False
+                 ) -> None:
+        """Mirror every subsequent event to `path` as one JSON line.
+
+        buffered=True holds lines in memory until `flush()` /
+        `close_sink()` — one write syscall per flush instead of per
+        event, and nothing hits disk for a sink that is reset before
+        flushing.  Switching sinks flushes the old one first so no
+        buffered event is ever silently dropped.
+        """
         if path is not None:
             d = os.path.dirname(os.path.abspath(path))
             os.makedirs(d, exist_ok=True)
+        self.flush()
         with self._lock:
             self._sink = path
+            self._buffered = buffered
 
     def event(self, name: str, **fields) -> dict:
         e = dict(event=name, t=time.time(), **fields)
+        line = None
         with self._lock:
             self._events.append(e)
             sink = self._sink
-        if sink is not None:
+            if sink is not None:
+                line = json.dumps(e, default=str)
+                if getattr(self, "_buffered", False):
+                    self._pending.append(line)
+                    line = None
+        if line is not None:
             with open(sink, "a") as f:
-                f.write(json.dumps(e, default=str) + "\n")
+                f.write(line + "\n")
         return e
+
+    def flush(self) -> int:
+        """Write buffered event lines to the sink; returns #flushed."""
+        with self._lock:
+            sink, pending = self._sink, self._pending
+            self._pending = []
+        if sink is None or not pending:
+            return 0
+        with open(sink, "a") as f:
+            f.write("\n".join(pending) + "\n")
+        return len(pending)
+
+    def close_sink(self) -> None:
+        """Flush any buffered lines, then detach the sink."""
+        self.flush()
+        with self._lock:
+            self._sink = None
+            self._buffered = False
 
     def events(self, name: str | None = None) -> list[dict]:
         with self._lock:
@@ -113,6 +149,12 @@ class MetricsRegistry:
                 if k.startswith(prefix)}
 
     def reset(self) -> None:
+        """Return the registry to a pristine state: counters,
+        observations and events cleared AND the sink detached (buffered
+        lines flushed first).  A test or engine that `reset()`s can no
+        longer leak events into a sink file another run attached —
+        snapshot isolation between runs in one process."""
+        self.close_sink()
         with self._lock:
             self._counters.clear()
             self._observations.clear()

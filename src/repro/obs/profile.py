@@ -1,0 +1,172 @@
+"""Compile-time cost/memory profiling for batched runners (DESIGN.md §16).
+
+`run_batch` asks XLA what each compiled executable costs — analytic
+FLOPs / bytes-accessed from `cost_analysis()` and the buffer breakdown
+from `memory_analysis()` — and records one profile per runner-cache key
+(padded shape + SimConfig + alloc impl + kmax + backend).  The key
+mirrors `get_batch_runner`'s cache key on purpose: the executable is a
+function of the *padded* shape, not of any individual topology, so the
+profile answers "what does this PadShape cost to run", which is exactly
+the denominator the pad-waste investigation divides live work by.
+
+Design constraints, matching `obs.trace`:
+
+  * **off is free**: profiling is disabled by default and the hot-path
+    check is one attribute read; nothing is lowered or compiled unless
+    a caller opted in;
+  * **never in timed regions**: `lower().compile()` does NOT share the
+    jit call cache (verified on jax 0.4.37: the AOT compile leaves
+    `_cache_size()` at 0), so a capture costs a full second compile.
+    Benchmarks therefore profile in a separate untimed pass — the
+    registry exists so they only pay that once per executable;
+  * **robust to backend gaps**: `cost_analysis`/`memory_analysis` are
+    best-effort across backends; missing fields record as None rather
+    than raising mid-experiment.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+__all__ = [
+    "ProfileRegistry", "PROFILER", "profiling_enabled",
+    "enable_profiling", "disable_profiling", "clear_profiles",
+    "get_profiles", "record_runner_profile",
+]
+
+
+def _cost_fields(compiled) -> dict:
+    """Flatten `cost_analysis()` to {flops, bytes_accessed, transcendentals}.
+
+    jax 0.4.x returns a list with one properties-dict per computation
+    (keys like 'flops', 'bytes accessed'); newer versions return the
+    dict directly.  Sum across computations, None when absent.
+    """
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return dict(flops=None, bytes_accessed=None, transcendentals=None)
+    if isinstance(ca, dict):
+        ca = [ca]
+    out = dict(flops=None, bytes_accessed=None, transcendentals=None)
+    names = dict(flops="flops", bytes_accessed="bytes accessed",
+                 transcendentals="transcendentals")
+    for props in ca or []:
+        for field, key in names.items():
+            v = props.get(key)
+            if v is not None:
+                out[field] = (out[field] or 0.0) + float(v)
+    return out
+
+
+def _memory_fields(compiled) -> dict:
+    """Buffer breakdown from `memory_analysis()` (CompiledMemoryStats)."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        ma = None
+    fields = dict(temp_bytes="temp_size_in_bytes",
+                  argument_bytes="argument_size_in_bytes",
+                  output_bytes="output_size_in_bytes",
+                  generated_code_bytes="generated_code_size_in_bytes")
+    return {name: (int(getattr(ma, attr)) if ma is not None
+                   and getattr(ma, attr, None) is not None else None)
+            for name, attr in fields.items()}
+
+
+class ProfileRegistry:
+    """Thread-safe once-per-executable profile store."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._profiles: dict = {}
+        self._enabled = False
+
+    # ---- lifecycle -----------------------------------------------------
+    def enable(self) -> None:
+        self._enabled = True
+
+    def disable(self) -> None:
+        self._enabled = False
+
+    @property
+    def enabled(self) -> bool:
+        return self._enabled
+
+    def clear(self) -> None:
+        with self._lock:
+            self._profiles = {}
+
+    # ---- capture -------------------------------------------------------
+    def capture(self, key: tuple, runner, args) -> dict:
+        """Profile one jitted runner, once per key (cached thereafter).
+
+        AOT-lowers and compiles `runner(*args)` — a real compile, so
+        call this outside any timed region — and records the XLA cost
+        and memory analyses plus the compile wall-clock.
+        """
+        with self._lock:
+            prof = self._profiles.get(key)
+        if prof is not None:
+            return prof
+        t0 = time.perf_counter()
+        compiled = runner.lower(*args).compile()
+        compile_s = time.perf_counter() - t0
+        prof = dict(key=[_jsonable(k) for k in key],
+                    compile_s=round(compile_s, 4),
+                    **_cost_fields(compiled), **_memory_fields(compiled))
+        with self._lock:
+            self._profiles.setdefault(key, prof)
+        return prof
+
+    def profiles(self) -> list[dict]:
+        """All captured profiles (insertion order)."""
+        with self._lock:
+            return list(self._profiles.values())
+
+
+def _jsonable(v):
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    return str(v)
+
+
+# ---------------------------------------------------------------------
+# process-wide default registry + module-level convenience API
+# ---------------------------------------------------------------------
+
+PROFILER = ProfileRegistry()
+
+
+def profiling_enabled() -> bool:
+    return PROFILER.enabled
+
+
+def enable_profiling() -> None:
+    PROFILER.enable()
+
+
+def disable_profiling() -> None:
+    PROFILER.disable()
+
+
+def clear_profiles() -> None:
+    PROFILER.clear()
+
+
+def get_profiles() -> list[dict]:
+    return PROFILER.profiles()
+
+
+def record_runner_profile(shape, cfg, alloc_impl: str, kmax: int,
+                          runner, args) -> dict:
+    """Profile a batched runner under its runner-cache key.
+
+    Called by `run_batch` when profiling is enabled; the key mirrors
+    `get_batch_runner` so one profile per compiled executable, however
+    many topologies share it.
+    """
+    import jax
+    key = (shape.n, shape.p, shape.c, shape.d, cfg, alloc_impl, kmax,
+           jax.default_backend())
+    return PROFILER.capture(key, runner, args)

@@ -123,12 +123,19 @@ class Tracer:
 
     # ---- export --------------------------------------------------------
     def chrome_events(self) -> list[dict]:
-        """Complete ("X") events, microsecond timestamps, one per span."""
+        """Complete ("X") events, microsecond timestamps, one per span.
+
+        Sorted by start time: spans are *recorded* at close (children
+        before parents), but trace viewers reconstruct per-thread nesting
+        from event order and timestamps, so parents must come first for
+        correct nested-span attribution."""
         pid = os.getpid()
-        return [dict(name=s.name, cat=s.cat or "repro", ph="X",
-                     ts=s.ts / 1e3, dur=s.dur / 1e3, pid=pid, tid=s.tid,
-                     args={k: _jsonable(v) for k, v in s.args.items()})
-                for s in self.spans()]
+        return sorted(
+            (dict(name=s.name, cat=s.cat or "repro", ph="X",
+                  ts=s.ts / 1e3, dur=s.dur / 1e3, pid=pid, tid=s.tid,
+                  args={k: _jsonable(v) for k, v in s.args.items()})
+             for s in self.spans()),
+            key=lambda e: (e["tid"], e["ts"], -e["dur"]))
 
     def save_chrome_trace(self, path: str, metadata: dict | None = None
                           ) -> int:
@@ -148,6 +155,25 @@ def _jsonable(v):
     if isinstance(v, (str, int, float, bool)) or v is None:
         return v
     return str(v)
+
+
+def span_summary(spans) -> dict[str, dict]:
+    """Aggregate a span list by name: {name: {count, total_s, max_s}}.
+
+    The compact per-phase rollup the benchmark harness embeds in BENCH
+    JSON (DESIGN.md §16) — how many times each phase ran and where the
+    wall-clock went, without shipping the full trace."""
+    out: dict[str, dict] = {}
+    for s in spans:
+        agg = out.setdefault(s.name, dict(count=0, total_s=0.0, max_s=0.0))
+        agg["count"] += 1
+        dur = s.dur / 1e9
+        agg["total_s"] += dur
+        agg["max_s"] = max(agg["max_s"], dur)
+    for agg in out.values():
+        agg["total_s"] = round(agg["total_s"], 6)
+        agg["max_s"] = round(agg["max_s"], 6)
+    return out
 
 
 # ---------------------------------------------------------------------

@@ -130,7 +130,9 @@ class SweepEngine:
                                  cfg)
 
     # keys whose leading axis is NOT the rate grid (never trimmed)
-    _PER_PHASE_KEYS = ("phase_cycles",)
+    # result keys whose leading axis is NOT the rate axis — never
+    # sliced back to n_rates when rate-padding is trimmed
+    _PER_PHASE_KEYS = ("phase_cycles", "window_cycles")
 
     def _run_grouped(self, specs, rates, schedules, single_program,
                      cfg: SimConfig | None = None):
@@ -177,19 +179,26 @@ class SweepEngine:
                     [g_rates,
                      np.repeat(g_rates[:, -1:], r_pad - n_rates, axis=1)],
                     axis=1)
-            s_pad = _round_up(len(g_specs), self.s_round) \
-                if self.bucket else len(g_specs)
+            s_live = len(g_specs)
+            s_pad = _round_up(s_live, self.s_round) \
+                if self.bucket else s_live
             while len(g_specs) < s_pad:           # replicate an inert tail
                 g_specs.append(g_specs[-1])
                 g_rates = np.concatenate([g_rates, g_rates[-1:]], axis=0)
                 if g_scheds is not None:
                     g_scheds.append(g_scheds[-1])
+            # bucket-fill attrs (DESIGN.md §16): live vs padded batch
+            # rows/rates — with the per-spec pad_fill fractions on the
+            # results, the complete pad-waste picture for this dispatch
             with trace("sweep.group", cat="sweep", specs=len(g_specs),
                        shape=str(shape), k_pad=k_pad,
+                       s_live=s_live, s_pad=s_pad,
+                       r_live=n_rates, r_pad=g_rates.shape[1],
                        kind="static" if g_scheds is None else "workload"):
                 out = sim.run_batch(g_specs, g_rates, cfg,
                                     pad_shape=shape, schedules=g_scheds,
                                     k_pad=k_pad or None)
+            metrics.observe("sweep.bucket_fill", s_live / s_pad)
             for j, i in enumerate(idxs):
                 results[i] = {
                     k: (v[:n_rates] if isinstance(v, np.ndarray)

@@ -314,9 +314,9 @@ def test_fault_rejected_skip_code():
     assert pl.skip_codes == {0: "FT001"}
 
 
-def test_schema_v5():
+def test_schema_v6():
     from repro.experiments.io import SCHEMA_VERSION
-    assert SCHEMA_VERSION == 5
+    assert SCHEMA_VERSION == 6
 
 
 # ---------------------------------------------------------------------

@@ -1,0 +1,217 @@
+"""Benchmark harness + profiling tests (DESIGN.md §16).
+
+Covers the three new observability pieces end to end:
+
+  * `repro.obs.bench` — BENCH document schema, write/load round-trip,
+    the metric-by-metric `compare` (direction-aware regression
+    detection) and the CLI's exit-code contract;
+  * `repro.obs.profile` — opt-in XLA cost/memory capture through
+    `run_batch`, keyed once per compiled runner;
+  * `benchmarks.harness.BenchRun` — the bench-facing recorder (timed
+    sections, observed pass, BENCH emission).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core import traffic as TR
+from repro.core.routing import build_routing
+from repro.core.simulator import SimConfig, make_spec, run_batch
+from repro.obs import bench as B
+from repro.obs.profile import (clear_profiles, disable_profiling,
+                               enable_profiling, get_profiles,
+                               profiling_enabled)
+
+CFG = SimConfig(cycles=120, warmup=40)
+
+
+@pytest.fixture(autouse=True)
+def _profiling_off():
+    disable_profiling()
+    clear_profiles()
+    yield
+    disable_profiling()
+    clear_profiles()
+
+
+@pytest.fixture(scope="module")
+def spec():
+    r = build_routing(T.build("mesh", 16))
+    return make_spec(r, TR.uniform(r.topo))
+
+
+# ---------------------------------------------------------------------
+# BENCH documents
+# ---------------------------------------------------------------------
+
+def _doc(name="t", **metrics):
+    metrics = metrics or dict(warm_s=1.0, speedup=2.0)
+    return B.bench_doc(name, metrics,
+                       directions={"speedup": "higher"}
+                       if "speedup" in metrics else None)
+
+
+def test_bench_doc_schema_and_metadata():
+    doc = _doc()
+    assert doc["bench_schema_version"] == B.BENCH_SCHEMA_VERSION
+    assert doc["machine"]["jax"] and doc["machine"]["backend"]
+    assert doc["metrics"] == dict(warm_s=1.0, speedup=2.0)
+    assert doc["directions"] == dict(speedup="higher")
+
+
+def test_bench_doc_rejects_nonscalar_metrics():
+    with pytest.raises(TypeError, match="non-scalar"):
+        B.bench_doc("t", dict(rows=[1, 2]))
+    with pytest.raises(ValueError, match="lower.*higher"):
+        B.bench_doc("t", dict(x=1.0), directions=dict(x="up"))
+
+
+def test_bench_write_load_roundtrip(tmp_path):
+    path = B.write_bench(_doc(), results_dir=str(tmp_path))
+    assert path.endswith("BENCH_t.json")
+    doc = B.load_bench(path)
+    assert doc["metrics"]["warm_s"] == 1.0
+
+
+def test_bench_load_rejects_wrong_schema(tmp_path):
+    p = tmp_path / "BENCH_x.json"
+    p.write_text(json.dumps(dict(bench_schema_version=999, name="x",
+                                 metrics={})))
+    with pytest.raises(ValueError, match="bench_schema_version"):
+        B.load_bench(str(p))
+
+
+# ---------------------------------------------------------------------
+# compare: direction-aware regression detection
+# ---------------------------------------------------------------------
+
+def test_compare_detects_regressions_both_directions():
+    old = _doc(warm_s=1.0, speedup=2.0)
+    new = _doc(warm_s=1.5, speedup=1.0)     # slower AND less speedup
+    by = {r["metric"]: r for r in B.compare(old, new, 25.0)}
+    assert by["warm_s"]["status"] == "regressed"      # lower-is-better
+    assert by["speedup"]["status"] == "regressed"     # higher-is-better
+    assert by["warm_s"]["delta_pct"] == 50.0
+    assert by["speedup"]["delta_pct"] == -50.0
+
+
+def test_compare_improvements_and_threshold():
+    old = _doc(warm_s=1.0, speedup=2.0)
+    fast = _doc(warm_s=0.5, speedup=3.0)
+    by = {r["metric"]: r for r in B.compare(old, fast, 25.0)}
+    assert by["warm_s"]["status"] == "improved"
+    assert by["speedup"]["status"] == "improved"
+    wiggle = _doc(warm_s=1.1, speedup=1.9)  # within 25%
+    assert all(r["status"] == "ok" for r in B.compare(old, wiggle, 25.0))
+    # same docs, tighter threshold -> regression
+    by = {r["metric"]: r for r in B.compare(old, wiggle, 5.0)}
+    assert by["warm_s"]["status"] == "regressed"
+
+
+def test_compare_new_and_removed_metrics():
+    old = B.bench_doc("t", dict(a=1.0, gone=2.0))
+    new = B.bench_doc("t", dict(a=1.0, fresh=3.0))
+    by = {r["metric"]: r for r in B.compare(old, new)}
+    assert by["gone"]["status"] == "removed"
+    assert by["fresh"]["status"] == "new"
+    assert by["a"]["status"] == "ok"
+
+
+def test_compare_zero_and_none_values():
+    old = B.bench_doc("t", dict(z=0.0, n=None))
+    new = B.bench_doc("t", dict(z=0.0, n=1.0))
+    by = {r["metric"]: r for r in B.compare(old, new)}
+    assert by["z"]["status"] == "ok"        # 0 -> 0 is no change
+    assert by["n"]["status"] == "new"       # None baseline: informative
+
+
+# ---------------------------------------------------------------------
+# CLI exit codes
+# ---------------------------------------------------------------------
+
+def _write(tmp_path, name, **metrics):
+    doc = B.bench_doc(name, metrics,
+                      directions={k: "higher" for k in metrics
+                                  if k == "speedup"})
+    return B.write_bench(doc, results_dir=str(tmp_path))
+
+
+def test_cli_compare_ok_and_regression(tmp_path):
+    old = _write(tmp_path / "a", "s", warm_s=1.0)
+    new_ok = _write(tmp_path / "b", "s", warm_s=1.05)
+    new_bad = _write(tmp_path / "c", "s", warm_s=3.0)
+    assert B.main(["compare", old, new_ok]) == 0
+    assert B.main(["compare", old, new_bad]) == 1
+    assert B.main(["compare", old, new_bad, "--warn-only"]) == 0
+    assert B.main(["compare", old, new_bad,
+                   "--fail-over", "500"]) == 0
+
+
+def test_cli_compare_missing_file(tmp_path):
+    old = _write(tmp_path, "s", warm_s=1.0)
+    assert B.main(["compare", old, str(tmp_path / "nope.json")]) == 2
+
+
+def test_cli_unknown_subcommand():
+    assert B.main(["frobnicate"]) == 2
+    assert B.main([]) == 2
+
+
+# ---------------------------------------------------------------------
+# profiling through run_batch
+# ---------------------------------------------------------------------
+
+def test_profile_disabled_by_default(spec):
+    run_batch([spec], [0.1], CFG)
+    assert not profiling_enabled()
+    assert get_profiles() == []
+
+
+def test_profile_capture_and_key_caching(spec):
+    enable_profiling()
+    run_batch([spec], [0.1], CFG)
+    run_batch([spec], [0.1], CFG)           # same runner: no second key
+    profs = get_profiles()
+    assert len(profs) == 1
+    p = profs[0]
+    assert p["compile_s"] > 0
+    assert p["flops"] and p["flops"] > 0
+    assert p["bytes_accessed"] and p["bytes_accessed"] > 0
+    assert p["temp_bytes"] is not None and p["temp_bytes"] > 0
+    assert p["argument_bytes"] is not None
+    # a different SimConfig is a different executable -> second profile
+    run_batch([spec], [0.1], CFG._replace(telemetry=True))
+    assert len(get_profiles()) == 2
+
+
+def test_profile_results_unchanged(spec):
+    """Profiling is a pure observer: counters match bitwise."""
+    plain = run_batch([spec], [0.1, 0.3], CFG)[0]
+    enable_profiling()
+    profiled = run_batch([spec], [0.1, 0.3], CFG)[0]
+    for k in ("delivered", "offered_n", "accepted_n", "lat_sum"):
+        np.testing.assert_array_equal(plain[k], profiled[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------
+# BenchRun recorder
+# ---------------------------------------------------------------------
+
+def test_bench_run_records_and_emits(tmp_path, spec):
+    from benchmarks.harness import BenchRun
+    run = BenchRun("unit", mode="smoke", results_dir=str(tmp_path))
+    with run.timed("work"):
+        pass
+    run.metric("cells", 3, direction="higher")
+    out = run.observed_pass(lambda: run_batch([spec], [0.1], CFG))
+    assert out[0]["pad_fill"]["state"] == 1.0
+    doc = run.finish()
+    assert doc["metrics"]["work_s"] >= 0
+    assert doc["spans"].get("sim.dispatch", {}).get("count") == 1
+    assert doc["profiles"] and doc["profiles"][0]["flops"] > 0
+    loaded = B.load_bench(str(tmp_path / "BENCH_unit.json"))
+    assert loaded["directions"] == dict(cells="higher")
+    split = run.device_host_split()
+    assert set(split) == {"device_s", "stack_s", "dispatch_s"}

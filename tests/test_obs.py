@@ -30,12 +30,15 @@ from repro.core import topology as T
 from repro.core import traffic as TR
 from repro.core.routing import build_routing
 from repro.core.simulator import (LAT_HIST_BINS, TELEMETRY_KEYS,
-                                  SimConfig, make_spec, run_batch)
+                                  TELEMETRY_WINDOW_KEYS, SimConfig,
+                                  make_spec, run_batch,
+                                  telemetry_window_cycles)
 from repro.obs.metrics import (MetricsRegistry, cache_counters,
                                metrics as METRICS)
-from repro.obs.report import gini, link_load_summary
+from repro.obs.report import gini, link_load_summary, window_summary
 from repro.obs.trace import (Tracer, clear_trace, disable_tracing,
-                             enable_tracing, get_spans, trace)
+                             enable_tracing, get_spans, span_summary,
+                             trace)
 from repro.sweep.engine import SweepEngine
 from repro.sweep.padding import PadShape
 
@@ -405,3 +408,317 @@ def test_experiment_pipeline_emits_plan_execute_spans():
     for want in ("experiment.plan", "experiment.execute",
                  "execute.chunk", "sweep.group", "sim.dispatch"):
         assert want in names, want
+
+
+# ---------------------------------------------------------------------
+# windowed flight recorder (DESIGN.md §16)
+# ---------------------------------------------------------------------
+
+WCFG = TCFG._replace(telemetry_windows=5)
+WKEYS_RAW = ("link_busy_w", "link_stall_w", "link_occ_w",
+             "inj_node_w", "eject_node_w")
+#: (windowed key, aggregate it must sum to over the window axis)
+WSUM = (("link_busy_w", "link_busy"), ("link_stall_w", "link_stall"),
+        ("link_occ_w", "link_occ_sum"), ("inj_node_w", "inj_node"),
+        ("eject_node_w", "eject_node"))
+
+
+def test_windowed_off_by_default(specs):
+    """telemetry_windows=0 leaves results without any windowed key, and
+    enabling it perturbs no aggregate counter (it only *bins*)."""
+    plain = run_batch(specs, RATES, TCFG)
+    windowed = run_batch(specs, RATES, WCFG)
+    for p, w in zip(plain, windowed):
+        assert not any(k in p for k in TELEMETRY_WINDOW_KEYS)
+        assert all(k in w for k in TELEMETRY_WINDOW_KEYS)
+        for k in RAW + TELEMETRY_KEYS:
+            np.testing.assert_array_equal(p[k], w[k], err_msg=k)
+
+
+@pytest.mark.parametrize("routing", ["static", "adaptive"])
+def test_windowed_conservation(specs, routing):
+    """Each windowed tensor sums over its window axis EXACTLY to the
+    aggregate counter, in both routing modes."""
+    cfg = WCFG._replace(routing=routing)
+    for res in run_batch(specs, RATES, cfg):
+        for wk, ak in WSUM:
+            np.testing.assert_array_equal(
+                res[wk].sum(axis=1), res[ak],
+                err_msg=f"{routing}: {wk} vs {ak}")
+        wc = res["window_cycles"]
+        assert wc.sum() == MEAS and len(wc) == 5
+        util = res["link_util_w"]
+        assert (util >= 0).all() and (util <= 1).all()
+
+
+def test_windowed_conservation_workload():
+    """Windowed counters reconcile on the phase-schedule path too."""
+    topo = T.build("folded_hexa_torus", 16)
+    r = build_routing(topo)
+    sched = W.phase_alternating(topo, phase_cycles=60, repeats=1).fit(MEAS)
+    spec = make_spec(r, sched.mean_traffic())
+    res = SweepEngine(cfg=WCFG).run_workloads([spec], [sched], RATES)[0]
+    for wk, ak in WSUM:
+        np.testing.assert_array_equal(res[wk].sum(axis=1), res[ak],
+                                      err_msg=wk)
+    # and the two decompositions of accepted agree: windows vs phases
+    np.testing.assert_array_equal(
+        res["inj_node_w"].sum(axis=(1, 2)),
+        res["accepted_ph"].sum(axis=1))
+
+
+@pytest.mark.parametrize("routing", ["static", "adaptive"])
+def test_windowed_padding_invariant(specs, routing):
+    """Windowed telemetry sliced from a FAT padded batch is bitwise
+    equal to the tight batch, in both routing modes (the fat-pad
+    regression test of the acceptance criteria)."""
+    cfg = WCFG._replace(routing=routing)
+    tight = run_batch(specs, RATES, cfg)
+    shape = PadShape.of(specs)
+    fat = PadShape(n=shape.n + 7, p=shape.p + 2, c=shape.c + 19,
+                   d=shape.d + 3)
+    padded = run_batch(specs, RATES, cfg, pad_shape=fat)
+    for spec, a, b in zip(specs, tight, padded):
+        for k in WKEYS_RAW + ("link_util_w", "window_cycles"):
+            np.testing.assert_array_equal(a[k], b[k],
+                                          err_msg=f"{routing}: {k}")
+        W_ = cfg.telemetry_windows
+        assert b["link_busy_w"].shape == (len(RATES), W_, spec.c)
+        assert b["inj_node_w"].shape == (len(RATES), W_, spec.n)
+
+
+def test_window_validation_errors(specs):
+    with pytest.raises(ValueError, match="telemetry=True"):
+        run_batch(specs, RATES, CFG._replace(telemetry_windows=4))
+    with pytest.raises(ValueError, match="exceeds the measured"):
+        run_batch(specs, RATES,
+                  TCFG._replace(telemetry_windows=MEAS + 1))
+    with pytest.raises(ValueError):
+        run_batch(specs, RATES, TCFG._replace(telemetry_windows=-1))
+
+
+def test_telemetry_window_cycles_partition():
+    """The host-side window grid partitions the measured span exactly,
+    even when W does not divide it."""
+    cfg = SimConfig(cycles=307, warmup=100, telemetry=True,
+                    telemetry_windows=6)
+    wc = telemetry_window_cycles(cfg)
+    assert wc.sum() == 207 and len(wc) == 6
+    assert wc.min() >= 207 // 6 and wc.max() <= 207 // 6 + 1
+    with pytest.raises(ValueError):
+        telemetry_window_cycles(cfg._replace(telemetry_windows=0))
+
+
+def test_window_rows_summary_and_csv(tmp_path):
+    """Tidy per-(window, link) rows + time-heatmap CSV round-trip, and
+    the per-window summary tracks a drifting hotspot's imbalance."""
+    wl = W.Workload("hotspot_drift",
+                    lambda topo: W.hotspot_drift(topo, n_phases=5,
+                                                 dwell=40))
+    exp = X.Experiment(
+        [X.Scenario("folded_hexa_torus", 16, traffic=wl,
+                    rates=X.ExplicitRates((0.1, 0.3)))],
+        cfg=WCFG, name="win")
+    frame = X.run(exp, engine=SweepEngine(cfg=WCFG))
+    rows = frame.window_rows(0)
+    spec = frame.planned[0].spec
+    W_ = WCFG.telemetry_windows
+    assert len(rows) == W_ * spec.c
+    # the window grid tiles the measured span
+    starts = sorted({r["t_start"] for r in rows})
+    ends = sorted({r["t_end"] for r in rows})
+    assert starts[0] == 0 and ends[-1] == MEAS
+    assert starts[1:] == ends[:-1]
+    # summary: one row per window, busy total conserved vs link rows
+    summ = window_summary(rows)
+    assert [s["window"] for s in summ] == list(range(W_))
+    assert sum(s["busy_total"] for s in summ) == \
+        sum(r["busy"] for r in rows)
+    path = tmp_path / "win.csv"
+    frame.to_window_csv(str(path))
+    header = path.read_text().splitlines()[0].split(",")
+    assert header[0] == "schema_version"
+    from repro.obs.flight import WINDOW_COLUMNS
+    assert list(WINDOW_COLUMNS) == header[1:1 + len(WINDOW_COLUMNS)]
+
+
+def test_window_rows_require_windowed_telemetry(specs):
+    from repro.obs.flight import window_rows
+    exp = X.Experiment([X.Scenario("mesh", 16,
+                                   rates=X.ExplicitRates((0.1,)))],
+                       cfg=TCFG)
+    frame = X.run(exp, engine=SweepEngine(cfg=TCFG))
+    with pytest.raises(ValueError, match="windowed telemetry"):
+        window_rows(frame.planned[0], frame.results[0])
+
+
+# ---------------------------------------------------------------------
+# pad-waste accounting (DESIGN.md §16)
+# ---------------------------------------------------------------------
+
+def test_pad_fill_on_results(specs):
+    """Every result carries its live-work fraction; padding fatter
+    shrinks it, and a tight single-spec batch is fill 1.0."""
+    tight = run_batch([specs[0]], RATES, CFG)[0]
+    assert tight["pad_fill"] == dict(state=1.0, chan=1.0, depth=1.0,
+                                     phase=1.0)
+    both = run_batch(specs, RATES, CFG)
+    shape = PadShape.of(specs)
+    for spec, res in zip(specs, both):
+        pf = res["pad_fill"]
+        assert 0 < pf["state"] <= 1.0 and pf["chan"] == spec.c / shape.c
+        assert pf["phase"] == 1.0
+    fat = PadShape(n=shape.n + 7, p=shape.p + 2, c=shape.c + 19,
+                   d=shape.d + 3)
+    fatter = run_batch(specs, RATES, CFG, pad_shape=fat)
+    for res, fres in zip(both, fatter):
+        assert fres["pad_fill"]["state"] < res["pad_fill"]["state"]
+
+
+def test_pad_fill_in_frame_rows():
+    """Tidy ResultFrame rows surface the pad-fill columns (schema v6)."""
+    exp = X.Experiment(
+        [X.Scenario(name, 16, rates=X.ExplicitRates((0.1,)))
+         for name in ("mesh", "folded_hexa_torus")],
+        cfg=CFG)
+    frame = X.run(exp, engine=SweepEngine(cfg=CFG))
+    for row in frame.ok():
+        assert 0 < row["pad_fill_state"] <= 1.0
+        assert 0 < row["pad_fill_chan"] <= 1.0
+        assert row["pad_fill_phase"] == 1.0
+    assert any(r["pad_fill_chan"] < 1.0 for r in frame.ok())
+
+
+def test_sweep_group_span_reports_bucket_fill(specs):
+    enable_tracing()
+    clear_trace()
+    SweepEngine(cfg=CFG, s_round=4).run_specs(specs, RATES)
+    groups = [s for s in get_spans() if s.name == "sweep.group"]
+    assert groups
+    for sp in groups:
+        assert sp.args["s_live"] <= sp.args["s_pad"]
+        assert sp.args["r_live"] <= sp.args["r_pad"]
+    disp = [s for s in get_spans() if s.name == "sim.dispatch"]
+    assert disp and all("fill_state" in s.args for s in disp)
+
+
+# ---------------------------------------------------------------------
+# metrics sink isolation (DESIGN.md §16 satellite)
+# ---------------------------------------------------------------------
+
+def test_metrics_buffered_sink_flush_and_close(tmp_path):
+    reg = MetricsRegistry()
+    sink = tmp_path / "ev.jsonl"
+    reg.set_sink(str(sink), buffered=True)
+    reg.event("a", x=1)
+    reg.event("b", x=2)
+    assert not sink.exists() or sink.read_text() == ""
+    assert reg.flush() == 2
+    assert len(sink.read_text().splitlines()) == 2
+    reg.event("c")
+    reg.close_sink()
+    lines = [json.loads(ln) for ln in sink.read_text().splitlines()]
+    assert [e["event"] for e in lines] == ["a", "b", "c"]
+    reg.event("after_close")          # no sink: memory only
+    assert len(sink.read_text().splitlines()) == 3
+
+
+def test_metrics_reset_detaches_sink(tmp_path):
+    """reset() flushes + detaches the sink, so a later run cannot leak
+    events into a file an earlier test attached."""
+    reg = MetricsRegistry()
+    sink = tmp_path / "run1.jsonl"
+    reg.set_sink(str(sink), buffered=True)
+    reg.inc("n")
+    reg.event("run1.ev")
+    reg.reset()
+    assert [json.loads(ln)["event"]
+            for ln in sink.read_text().splitlines()] == ["run1.ev"]
+    assert reg.get("n") == 0 and reg.events() == []
+    reg.event("run2.ev")              # post-reset events stay in memory
+    assert len(sink.read_text().splitlines()) == 1
+
+
+def test_metrics_sink_switch_flushes_old(tmp_path):
+    reg = MetricsRegistry()
+    a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    reg.set_sink(str(a), buffered=True)
+    reg.event("one")
+    reg.set_sink(str(b))              # unbuffered from here
+    assert len(a.read_text().splitlines()) == 1
+    reg.event("two")
+    assert json.loads(b.read_text())["event"] == "two"
+
+
+# ---------------------------------------------------------------------
+# tracer edge cases (DESIGN.md §16 satellite)
+# ---------------------------------------------------------------------
+
+def test_tracer_empty_export(tmp_path):
+    t = Tracer()
+    t.enable()
+    assert t.chrome_events() == []
+    path = tmp_path / "empty.trace.json"
+    assert t.save_chrome_trace(str(path)) == 0
+    doc = json.loads(path.read_text())
+    assert doc["traceEvents"] == []
+
+
+def test_tracer_concurrent_threads():
+    import threading
+    t = Tracer()
+    t.enable()
+
+    def worker(i):
+        for j in range(20):
+            with t.trace(f"w{i}", cat="thr", j=j):
+                pass
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    spans = t.spans()
+    assert len(spans) == 80           # no span lost to a race
+    # every span carries its recording thread's id (ids may be recycled
+    # once a thread exits, so count per worker, not distinct tids)
+    assert all(s.tid for s in spans)
+    by_name = span_summary(spans)
+    assert all(by_name[f"w{i}"]["count"] == 20 for i in range(4))
+    for i in range(4):
+        tids = {s.tid for s in spans if s.name == f"w{i}"}
+        assert len(tids) == 1         # one worker -> one tid
+
+
+def test_nested_span_parent_attribution():
+    """Chrome events come out start-sorted with parents before children
+    (spans RECORD innermost-first; export must not)."""
+    t = Tracer()
+    t.enable()
+    with t.trace("parent", cat="t"):
+        with t.trace("child", cat="t"):
+            with t.trace("grandchild", cat="t"):
+                pass
+    assert [s.name for s in t.spans()] == ["grandchild", "child",
+                                           "parent"]
+    ev = t.chrome_events()
+    assert [e["name"] for e in ev] == ["parent", "child", "grandchild"]
+    p, c, g = ev
+    assert p["ts"] <= c["ts"] <= g["ts"]
+    assert p["ts"] + p["dur"] >= c["ts"] + c["dur"] \
+        >= g["ts"] + g["dur"]
+
+
+def test_span_summary_aggregates():
+    t = Tracer()
+    t.enable()
+    for _ in range(3):
+        with t.trace("x"):
+            pass
+    with t.trace("y"):
+        pass
+    summ = span_summary(t.spans())
+    assert summ["x"]["count"] == 3 and summ["y"]["count"] == 1
+    assert summ["x"]["total_s"] >= summ["x"]["max_s"] >= 0
